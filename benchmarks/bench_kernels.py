@@ -1,0 +1,95 @@
+"""Pallas kernel benchmarks: correctness vs oracle + interpret-mode timing.
+
+On this CPU container the kernels run under ``interpret=True`` (the kernel
+body executed in Python), so wall times are NOT TPU times — the meaningful
+outputs are (a) max|err| vs the pure-jnp oracle, (b) the VMEM working-set
+per BlockSpec tile, which must fit the 128 MB v5e VMEM.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import flash_attention_op, grouped_matmul, ssd_scan_op
+from repro.kernels import ref as kref
+
+__all__ = ["bench_flash_attention", "bench_ssd_scan", "bench_moe_gmm", "run"]
+
+
+def _err(a, b):
+    return float(jnp.max(jnp.abs(a.astype(jnp.float32) -
+                                 b.astype(jnp.float32))))
+
+
+def bench_flash_attention() -> Dict:
+    rng = np.random.default_rng(0)
+    B, S, H, hd = 1, 256, 2, 64
+    q = jnp.asarray(rng.standard_normal((B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, H, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, H, hd)), jnp.float32)
+    t0 = time.perf_counter()
+    out = flash_attention_op(q, k, v, causal=True)
+    out.block_until_ready()
+    dt = time.perf_counter() - t0
+    want = kref.flash_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=True).transpose(0, 2, 1, 3)
+    bq, bk = 128, 128
+    vmem = (bq * hd + 2 * bk * hd + bq * bk + bq * hd) * 4
+    return {"name": "flash_attention", "shape": f"B{B} S{S} H{H} hd{hd}",
+            "max_err": _err(out, want), "interpret_wall_s": round(dt, 2),
+            "vmem_tile_bytes": vmem, "vmem_ok": vmem < 128 * 2**20,
+            "ok": _err(out, want) < 2e-3}
+
+
+def bench_ssd_scan() -> Dict:
+    rng = np.random.default_rng(1)
+    b, s, h, p, g, n = 1, 256, 2, 32, 1, 32
+    x = jnp.asarray(rng.standard_normal((b, s, h, p)), jnp.float32)
+    dt_ = jnp.asarray(rng.uniform(0.1, 0.9, (b, s, h)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((b, s, g, n)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((b, s, g, n)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 2.0, (h,)), jnp.float32)
+    t0 = time.perf_counter()
+    y = ssd_scan_op(x, dt_, B, C, A, chunk=64)
+    y.block_until_ready()
+    dt = time.perf_counter() - t0
+    want = kref.ssd_scan_ref(x.transpose(0, 2, 1, 3), dt_.transpose(0, 2, 1),
+                             B.transpose(0, 2, 1, 3), C.transpose(0, 2, 1, 3),
+                             A).transpose(0, 2, 1, 3)
+    return {"name": "ssd_scan", "shape": f"b{b} s{s} h{h} p{p} n{n}",
+            "max_err": _err(y, want), "interpret_wall_s": round(dt, 2),
+            "ok": _err(y, want) < 2e-3}
+
+
+def bench_moe_gmm() -> Dict:
+    rng = np.random.default_rng(2)
+    E, cap, D, F = 4, 64, 128, 256
+    lhs = jnp.asarray(rng.standard_normal((E, cap, D)), jnp.float32)
+    rhs = jnp.asarray(rng.standard_normal((E, D, F)), jnp.float32)
+    t0 = time.perf_counter()
+    out = grouped_matmul(lhs, rhs)
+    out.block_until_ready()
+    dt = time.perf_counter() - t0
+    want = jnp.einsum("ecd,edf->ecf", lhs, rhs)
+    return {"name": "moe_grouped_matmul", "shape": f"E{E} cap{cap} D{D} F{F}",
+            "max_err": _err(out, want), "interpret_wall_s": round(dt, 2),
+            "ok": _err(out, want) < 2e-2}
+
+
+def run() -> List[Dict]:
+    out = []
+    for fn in (bench_flash_attention, bench_ssd_scan, bench_moe_gmm):
+        rec = fn()
+        out.append(rec)
+        status = "OK " if rec.get("ok") else "FAIL"
+        print(f"[{status}] {rec['name']:32s} {rec}", flush=True)
+    return out
+
+
+if __name__ == "__main__":
+    run()

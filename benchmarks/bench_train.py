@@ -1,0 +1,87 @@
+"""End-to-end throughput benchmarks (reduced configs, CPU container).
+
+Two harnesses: training tokens/s through the full Trainer (data pipeline +
+jitted step + async checkpointing), and serving tokens/s through the
+continuous-batching server.  On a real pod the same code paths run the
+full configs; the numbers here validate the plumbing, not TPU speed.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+from typing import Dict, List
+
+import numpy as np
+
+__all__ = ["bench_train_throughput", "bench_serve_throughput", "run"]
+
+
+def _mesh():
+    import jax
+    return jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def bench_train_throughput(steps: int = 10) -> Dict:
+    from repro import optim
+    from repro.configs import get_config, reduced_config
+    from repro.configs.base import ShapeConfig
+    from repro.data.pipeline import batch_iterator
+    from repro.runtime import Trainer, TrainerConfig
+
+    cfg = reduced_config(get_config("stablelm-3b"))
+    shape = ShapeConfig("bench", seq_len=128, global_batch=16, kind="train")
+    with tempfile.TemporaryDirectory() as td:
+        tr = Trainer(cfg, shape, _mesh(),
+                     optim.OptConfig(warmup_steps=2, total_steps=steps),
+                     TrainerConfig(total_steps=steps, ckpt_every=steps,
+                                   ckpt_dir=td, log_every=10 ** 9))
+        tr.init()
+        it = batch_iterator(cfg, shape)
+        tr.tcfg.total_steps = 2
+        tr.run(it)                       # warmup/compile
+        t0 = time.perf_counter()
+        tr.tcfg.total_steps = steps
+        m = tr.run(it)
+        dt = time.perf_counter() - t0
+        tr.close()
+    toks = (steps - 2) * shape.global_batch * shape.seq_len
+    return {"name": "train_throughput_reduced",
+            "tokens_per_s": round(toks / dt, 1),
+            "step_ms": round(dt / (steps - 2) * 1e3, 1),
+            "final_loss": round(m["loss"], 3), "ok": np.isfinite(m["loss"])}
+
+
+def bench_serve_throughput() -> Dict:
+    from repro.configs import get_config, reduced_config
+    from repro.launch.serve import Request, Server
+
+    cfg = reduced_config(get_config("stablelm-3b"))
+    rng = np.random.default_rng(0)
+    server = Server(cfg, _mesh(), slots=4, max_seq=64)
+    for r in range(8):
+        server.submit(Request(rid=r,
+                              prompt=rng.integers(0, cfg.vocab_size, 4)
+                              .astype(np.int32), max_new=8))
+    t0 = time.perf_counter()
+    ticks = server.run()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.out) for r in server.completed)
+    return {"name": "serve_throughput_reduced",
+            "requests": len(server.completed), "ticks": ticks,
+            "tokens_per_s": round(toks / dt, 1),
+            "ok": len(server.completed) == 8}
+
+
+def run() -> List[Dict]:
+    out = []
+    for fn in (bench_train_throughput, bench_serve_throughput):
+        rec = fn()
+        out.append(rec)
+        status = "OK " if rec.get("ok") else "FAIL"
+        print(f"[{status}] {rec['name']:32s} {rec}", flush=True)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Benchmark aggregator: one suite per paper table/claim + system harnesses.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --suite netsim
+
+Writes a JSON summary to experiments/bench_results.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+SUITES = ("netsim", "collectives", "kernels", "train")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--suite", choices=SUITES, default=None)
+    args = ap.parse_args()
+    picked = [args.suite] if args.suite else list(SUITES)
+
+    # the collectives/train suites exercise a 2x4 device mesh; must be set
+    # before the first jax backend use
+    import jax
+    jax.config.update("jax_num_cpu_devices", 8)
+
+    results = {}
+    t0 = time.perf_counter()
+    for name in picked:
+        print(f"\n=== suite: {name} ===", flush=True)
+        mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
+        results[name] = mod.run()
+    wall = time.perf_counter() - t0
+
+    flat = [r for rs in results.values() for r in rs]
+    n_ok = sum(1 for r in flat if r.get("ok"))
+    print(f"\n{n_ok}/{len(flat)} benchmarks OK in {wall:.1f}s")
+    out = Path(__file__).resolve().parents[1] / "experiments"
+    out.mkdir(exist_ok=True)
+    with open(out / "bench_results.json", "w") as f:
+        json.dump(results, f, indent=1, default=str)
+    print(f"wrote {out / 'bench_results.json'}")
+    if n_ok != len(flat):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

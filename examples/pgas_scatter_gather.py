@@ -1,0 +1,93 @@
+"""PGAS example: remote scatter/gather + a CAS mutex over the device mesh.
+
+The paper's core programming model — every tile owns a memory region in
+one global <X, Y, local> address space — exercised directly on an 8-device
+mesh: a random scatter (remote stores, "the architecture is very good at
+random scatter"), a gather-back (remote loads), and a distributed mutex
+built on remote compare-and-swap.
+
+  PYTHONPATH=src python examples/pgas_scatter_gather.py
+"""
+import jax
+
+jax.config.update("jax_num_cpu_devices", 8)
+
+import jax.numpy as jnp                                        # noqa: E402
+import numpy as np                                             # noqa: E402
+from jax import lax, shard_map                                 # noqa: E402
+from jax.sharding import PartitionSpec as P                    # noqa: E402
+
+from repro.core import pgas                                    # noqa: E402
+
+NY, NX = 2, 4
+T = NY * NX
+WORDS = 32
+SLOTS = 4
+
+
+def main():
+    mesh = jax.make_mesh((NY, NX), ("y", "x"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mem0 = jnp.zeros((T, WORDS), jnp.float32)   # one region per tile
+
+    def island(mem):
+        mem = mem[0]                             # (WORDS,) local region
+        me = pgas.tile_linear_index("x", "y")
+
+        # --- random scatter: each tile stores me*100+s to tile (me+s)%T --
+        pkts = pgas.make_packet_batch(T, SLOTS)
+        for s in range(SLOTS):
+            dst = (me + s + 1) % T
+            pkts = pgas.PacketBatch(
+                addr=pkts.addr.at[dst, s].set(s),
+                data=pkts.data.at[dst, s].set(me * 100.0 + s),
+                mask=pkts.mask.at[dst, s].set(True))
+        mem, credits = pgas.remote_store(mem, pkts, "x", "y")
+        fence_ok = credits.sum() == SLOTS        # all stores committed
+
+        # --- gather back: read word s of tile (me+s)%T -------------------
+        lpk = pgas.make_packet_batch(T, SLOTS)
+        for s in range(SLOTS):
+            dst = (me + s + 1) % T
+            lpk = pgas.PacketBatch(
+                addr=lpk.addr.at[dst, s].set(s),
+                data=lpk.data,
+                mask=lpk.mask.at[dst, s].set(True))
+        data, valid = pgas.remote_load(mem, lpk, "x", "y")
+        got = jnp.where(valid, data, 0.0).sum()
+
+        # --- CAS mutex at tile 0, word 0: exactly one winner -------------
+        cpk = pgas.PacketBatch(
+            addr=jnp.zeros((T, 1), jnp.int32),
+            data=jnp.full((T, 1), (me + 1).astype(jnp.float32)),
+            mask=jnp.zeros((T, 1), bool).at[0, 0].set(True))
+        mem = mem.at[0].set(0.0)                 # unlock
+        mem, old = pgas.remote_cas(mem, cpk, jnp.zeros((T, 1)), "x", "y")
+        i_won = (old[0, 0] == 0.0)
+        winners = lax.psum(i_won.astype(jnp.int32), ("x", "y"))
+
+        return (mem[None], credits[None], got[None],
+                fence_ok[None], winners[None])
+
+    mem, credits, got, fence, winners = shard_map(
+        island, mesh=mesh,
+        in_specs=P(("y", "x"), None),
+        out_specs=(P(("y", "x"), None), P(("y", "x"), None),
+                   P(("y", "x")), P(("y", "x")), P(("y", "x"))),
+        axis_names={"x", "y"})(mem0)
+
+    mem = np.asarray(mem)
+    print("memory regions after scatter (tile, first 4 words):")
+    for t in range(T):
+        print(f"  tile {t}: {mem[t, :SLOTS]}")
+    print("store credits per tile:", np.asarray(credits).tolist())
+    print("fence ok (credits == issued):", bool(np.asarray(fence).all()))
+    print("gather sums per tile:", np.asarray(got).round(1).tolist())
+    print("CAS mutex winners (must be 1):", int(np.asarray(winners)[0]))
+    assert bool(np.asarray(fence).all())
+    assert int(np.asarray(winners)[0]) == 1
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

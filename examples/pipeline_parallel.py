@@ -1,0 +1,78 @@
+"""Pipeline parallelism via token-queue channels (paper C6 / Option 2).
+
+Trains a small LM with its layer stack split across 4 pipeline stages
+(the ``model`` mesh axis), microbatches flowing stage-to-stage through
+one-hop ppermute channels.  Compares against the sequential reference and
+prints the bubble fraction.
+
+  PYTHONPATH=src python examples/pipeline_parallel.py
+"""
+import jax
+
+jax.config.update("jax_num_cpu_devices", 8)
+
+import jax.numpy as jnp                                        # noqa: E402
+import numpy as np                                             # noqa: E402
+
+from repro.parallel.pipeline import bubble_fraction, pipeline_apply  # noqa: E402
+
+L, D, V = 8, 64, 512
+N_MICRO, MB, S = 8, 2, 32
+
+
+def body(lp, x):
+    """One stage = L/n_stages residual MLP blocks."""
+    def blk(h, w):
+        w1, w2 = w
+        return h + jnp.tanh(h @ w1) @ w2, None
+    y, _ = jax.lax.scan(blk, x, lp)
+    return y
+
+
+def main():
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    n_stages = mesh.shape["model"]
+    rng = np.random.default_rng(0)
+    w1 = jnp.asarray(rng.standard_normal((L, D, D)) * 0.1, jnp.float32)
+    w2 = jnp.asarray(rng.standard_normal((L, D, D)) * 0.1, jnp.float32)
+    params = (w1.reshape(n_stages, -1, D, D), w2.reshape(n_stages, -1, D, D))
+    x = jnp.asarray(rng.standard_normal((N_MICRO, MB * S, D)), jnp.float32)
+    y_tgt = jnp.asarray(rng.standard_normal((N_MICRO, MB * S, D)),
+                        jnp.float32)
+
+    def loss(ps, xb):
+        out = pipeline_apply(body, ps, xb, mesh, stage_axis="model",
+                             batch_axis="data")
+        return jnp.mean((out - y_tgt) ** 2)
+
+    def loss_ref(ws, xb):
+        w1f = ws[0].reshape(L, D, D)
+        w2f = ws[1].reshape(L, D, D)
+        out = jax.vmap(lambda m: body((w1f, w2f), m))(xb)
+        return jnp.mean((out - y_tgt) ** 2)
+
+    l_pipe = float(jax.jit(loss)(params, x))
+    l_ref = float(jax.jit(loss_ref)(params, x))
+    print(f"pipeline loss {l_pipe:.6f} == sequential {l_ref:.6f}")
+    assert abs(l_pipe - l_ref) < 1e-5
+
+    # a few SGD steps through the pipelined graph (bwd = reverse wave)
+    lr = 0.05
+    grad = jax.jit(jax.grad(loss))
+    p = params
+    losses = []
+    for i in range(10):
+        g = grad(p, x)
+        p = jax.tree.map(lambda a, b: a - lr * b, p, g)
+        losses.append(float(jax.jit(loss)(p, x)))
+    print("pipelined training losses:", [round(l, 4) for l in losses])
+    assert losses[-1] < losses[0]
+    print(f"bubble fraction at {N_MICRO} microbatches x {n_stages} stages: "
+          f"{bubble_fraction(N_MICRO, n_stages):.2%} "
+          f"(in-flight <= {n_stages} = channel depth, the C3 BDP rule)")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps.
+
+Exercises the full production path — synthetic data pipeline with
+credit-bounded prefetch, DP+TP sharding, ZeRO-1 AdamW, async
+checkpointing, fault injection + recovery, and a mid-run elastic
+re-shard — on the CPU container.
+
+  PYTHONPATH=src python examples/train_lm.py            # ~300 steps
+  PYTHONPATH=src python examples/train_lm.py --steps 50 # quick pass
+"""
+import argparse
+import dataclasses
+
+import jax
+
+jax.config.update("jax_num_cpu_devices", 8)
+
+import numpy as np                                             # noqa: E402
+
+from repro import optim                                        # noqa: E402
+from repro.configs import get_config                           # noqa: E402
+from repro.configs.base import ShapeConfig                     # noqa: E402
+from repro.data.pipeline import DataConfig, Prefetcher, batch_iterator  # noqa: E402
+from repro.launch.mesh import make_test_mesh                   # noqa: E402
+from repro.runtime import FaultInjector, Trainer, TrainerConfig  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--ckpt-dir", default="checkpoints/train_lm")
+    args = ap.parse_args()
+
+    # ~100M params: a 12-layer, 512-wide stablelm-family config
+    cfg = dataclasses.replace(
+        get_config("stablelm-3b"), name="stablelm-100m",
+        num_layers=12, d_model=512, num_heads=8, num_kv_heads=8,
+        head_dim=64, d_ff=2048, vocab_size=50304, dtype="float32")
+    print(f"params: {cfg.param_count()/1e6:.1f}M")
+    shape = ShapeConfig("train_lm", args.seq_len, args.batch, "train")
+    mesh = make_test_mesh((2, 4), ("data", "model"))
+
+    trainer = Trainer(
+        cfg, shape, mesh,
+        optim.OptConfig(lr_peak=6e-4, warmup_steps=30,
+                        total_steps=args.steps),
+        TrainerConfig(total_steps=args.steps, ckpt_every=100,
+                      ckpt_dir=args.ckpt_dir, log_every=20),
+        # inject two transient faults to demonstrate retry/recovery
+        fault_injector=FaultInjector({40: 1, 140: 1}))
+    trainer.resume_or_init()
+
+    data = Prefetcher(batch_iterator(cfg, shape, start_step=trainer.step,
+                                     data_cfg=DataConfig(prefetch_credits=2)))
+    losses = []
+    try:
+        half = args.steps // 2
+        trainer.tcfg.total_steps = half
+        trainer.run(iter(data),
+                    on_step=lambda s, m: losses.append(float(m["loss"])))
+        # elastic scale-down mid-run: 8 chips -> 4 chips, same run
+        small = jax.sharding.Mesh(
+            np.array(jax.devices()[:4]).reshape(1, 4), ("data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        trainer.reshard(small)
+        print(f"[elastic] resharded to 4 chips at step {trainer.step}")
+        trainer.tcfg.total_steps = args.steps
+        trainer.run(iter(data),
+                    on_step=lambda s, m: losses.append(float(m["loss"])))
+    finally:
+        data.close()
+        trainer.close()
+
+    print(f"\nloss: first10={np.mean(losses[:10]):.3f} "
+          f"last10={np.mean(losses[-10:]):.3f}")
+    print("events:", [e["kind"] for e in trainer.events])
+    assert np.mean(losses[-10:]) < np.mean(losses[:10]), "did not learn"
+    print("OK: loss decreased through faults and re-sharding")
+
+
+if __name__ == "__main__":
+    main()

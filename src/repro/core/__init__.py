@@ -1,0 +1,20 @@
+"""The paper's primary contribution as composable JAX modules.
+
+Layers (see DESIGN.md §1 for the paper-mechanism mapping):
+
+* :mod:`repro.core.coords`      — PGAS ``<X, Y, local>`` addressing (C1)
+* :mod:`repro.core.routing`     — XY dimension-ordered collectives (C4)
+* :mod:`repro.core.pgas`        — remote store / load / CAS over shard_map (C1)
+* :mod:`repro.core.credits`     — credit flow control + fences (C3)
+* :mod:`repro.core.token_queue` — credit-bounded channels (C6)
+* :mod:`repro.core.endpoint`    — the standard endpoint (C5)
+* :mod:`repro.core.sync`        — barrier / mutex on remote CAS (C8)
+* :mod:`repro.core.netsim`      — cycle-level mesh simulator (C9 oracle)
+"""
+from . import coords, credits, endpoint, netsim, pgas, routing, sync, token_queue  # noqa: F401
+
+from .coords import GridSpec, encode_address, decode_address, manhattan_hops, xy_route  # noqa: F401
+from .credits import CreditCounter, make_credits, bdp_credits  # noqa: F401
+from .pgas import PacketBatch, make_packet_batch, remote_store, remote_load, remote_cas  # noqa: F401
+from .routing import xy_all_to_all, xy_all_reduce, xy_reduce_scatter, xy_all_gather, shift  # noqa: F401
+from .token_queue import TokenQueue, tq_make, tq_send, tq_recv  # noqa: F401

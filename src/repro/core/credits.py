@@ -1,0 +1,75 @@
+"""Credit-based flow control (paper C3).
+
+The standard endpoint tracks outstanding transactions with a credit counter
+initialized to ``max_out_credits_p``; a *fence* waits for the counter to
+return to its initial value, which proves every prior store has **committed**
+at its destination.
+
+The same discipline governs three framework subsystems:
+
+* the data pipeline's prefetch depth (``credits = BDP`` of host->device),
+* the pipeline-parallel schedule (in-flight microbatches),
+* async checkpoint writes (bounded dirty buffers).
+
+:func:`bdp_credits` encodes the paper's sizing rule: *"set the number of
+outstanding credits to the uncongested bandwidth-delay product of the longest
+round-trip path"* (e.g. 1 word/cycle x 128-cycle RTT = 128 credits; or
+20 hops x FIFO depth 4 = 80).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["CreditCounter", "make_credits", "issue", "ack", "fence_ok",
+           "bdp_credits"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CreditCounter:
+    """JAX-traceable credit counter (``out_credits_o``)."""
+
+    available: jax.Array   # scalar int32 — credits currently available
+    max_credits: jax.Array  # scalar int32 — max_out_credits_p
+
+    def replace(self, **kw):
+        return dataclasses.replace(self, **kw)
+
+
+def make_credits(max_out_credits: int) -> CreditCounter:
+    m = jnp.asarray(max_out_credits, jnp.int32)
+    return CreditCounter(available=m, max_credits=m)
+
+
+def issue(c: CreditCounter, n) -> tuple:
+    """Try to issue ``n`` transactions; returns ``(counter, granted)``.
+
+    ``granted <= n`` — the endpoint must not send when out of credit
+    ("Congestion Control: the core should avoid sending when out of
+    credit"), so the grant is clamped, never negative.
+    """
+    n = jnp.asarray(n, jnp.int32)
+    granted = jnp.minimum(n, c.available)
+    return c.replace(available=c.available - granted), granted
+
+
+def ack(c: CreditCounter, n) -> CreditCounter:
+    """Return ``n`` credits (reverse-network acknowledgements)."""
+    n = jnp.asarray(n, jnp.int32)
+    return c.replace(available=jnp.minimum(c.available + n, c.max_credits))
+
+
+def fence_ok(c: CreditCounter) -> jax.Array:
+    """Transaction fence predicate: all outstanding transactions committed
+    iff the counter is back to ``max_out_credits_p``."""
+    return c.available == c.max_credits
+
+
+def bdp_credits(round_trip_hops: int, fifo_depth: int = 4,
+                issue_rate: float = 1.0) -> int:
+    """Paper's sizing rule (Appendix A): ``hops x FIFO depth`` credits,
+    i.e. the bandwidth-delay product at ``issue_rate`` words/cycle."""
+    return max(1, int(round_trip_hops * fifo_depth * issue_rate))

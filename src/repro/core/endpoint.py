@@ -1,0 +1,108 @@
+"""The standard endpoint (paper C5) — plug-and-play mesh integration.
+
+``bsg_manycore_endpoint_standard`` hides the network's flow-control rules
+behind a master/slave interface so that "the core can see the network as a
+general master/slave module".  :class:`Endpoint` plays the same role for a
+JAX compute function: it owns the credit counter, builds destination-major
+packet batches, runs the PGAS delivery, and enforces the two protocol rules
+that the paper says designers get wrong:
+
+1. incoming requests are absorbed at line rate (the slave handler is a pure
+   function applied to the whole inbound batch — it cannot block);
+2. the reverse path is a sink (responses land in pre-allocated buffers).
+
+It also implements the endpoint's special config registers (freeze /
+arbiter-priority) as fields of the state, which the launcher uses for
+start/stop semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import credits as cr
+from . import pgas
+
+__all__ = ["EndpointState", "make_endpoint", "master_store", "master_load",
+           "fence", "freeze", "unfreeze", "CFG_FREEZE_ADDR", "CFG_ARB_ADDR"]
+
+# Paper: "Special Local Address Map" — MSB set selects the config region.
+CFG_FREEZE_ADDR = 0x0
+CFG_ARB_ADDR = 0x4
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EndpointState:
+    """Per-tile endpoint state (a pytree; lives inside shard_map)."""
+
+    mem: jax.Array              # local memory region
+    credits: cr.CreditCounter   # out_credits_o
+    frozen: jax.Array           # freeze_r_o (freeze_init_p semantics)
+    arb_priority: jax.Array     # reverse_arb_pr_o toggle
+
+    def replace(self, **kw):
+        return dataclasses.replace(self, **kw)
+
+
+def make_endpoint(mem_words: int, max_out_credits: int,
+                  dtype=jnp.float32, freeze_init: bool = False) -> EndpointState:
+    return EndpointState(
+        mem=jnp.zeros((mem_words,), dtype),
+        credits=cr.make_credits(max_out_credits),
+        frozen=jnp.asarray(freeze_init, bool),
+        arb_priority=jnp.asarray(False, bool),
+    )
+
+
+def master_store(state: EndpointState, pkts: pgas.PacketBatch,
+                 x_axis: str, y_axis: str) -> Tuple[EndpointState, jax.Array]:
+    """Issue a batch of remote stores, respecting credit flow control.
+
+    Packets beyond the available credit are masked off (the core "should
+    avoid sending when out of credit"); returns the per-destination count of
+    packets actually sent, so callers can retry the remainder.
+    """
+    want = pkts.mask.sum().astype(jnp.int32)
+    counter, granted = cr.issue(state.credits, want)
+    # Grant in (dest, slot) order: a prefix of the flattened valid packets.
+    order = jnp.cumsum(pkts.mask.reshape(-1).astype(jnp.int32))
+    grant_mask = (order <= granted).reshape(pkts.mask.shape) & pkts.mask
+    sendable = dataclasses.replace(pkts, mask=grant_mask & ~state.frozen)
+
+    mem, credits_back = pgas.remote_store(state.mem, sendable, x_axis, y_axis)
+    counter = cr.ack(counter, credits_back.sum())
+    sent = sendable.mask.sum(axis=1).astype(jnp.int32)
+    return state.replace(mem=mem, credits=counter), sent
+
+
+def master_load(state: EndpointState, pkts: pgas.PacketBatch,
+                x_axis: str, y_axis: str
+                ) -> Tuple[EndpointState, jax.Array, jax.Array]:
+    """Issue remote loads; returns ``(state, data, valid)``.
+
+    The response path has NO handshake ("the core must accept the data") —
+    ``data`` is a dense pre-allocated buffer, the sink property.
+    """
+    data, valid = pgas.remote_load(state.mem, pkts, x_axis, y_axis)
+    return state, data, valid
+
+
+def fence(state: EndpointState) -> jax.Array:
+    """Transaction fence: true iff all outstanding stores have committed
+    (credit counter back at ``max_out_credits_p``)."""
+    return cr.fence_ok(state.credits)
+
+
+def freeze(state: EndpointState) -> EndpointState:
+    """Config-register write: Freeze Register := 1 (stop the tile)."""
+    return state.replace(frozen=jnp.asarray(True, bool))
+
+
+def unfreeze(state: EndpointState) -> EndpointState:
+    """Config-register write: Freeze Register := 0 (start the tile)."""
+    return state.replace(frozen=jnp.asarray(False, bool))

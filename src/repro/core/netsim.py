@@ -1,0 +1,398 @@
+"""Cycle-level simulator of the BaseJump Manycore Accelerator Network.
+
+This is the *faithful reproduction* layer: a vectorized (numpy) model of the
+mesh exactly as the paper specifies it —
+
+* 5-port routers (P/W/E/N/S, the ``bsg_noc_pkg`` order) with **input FIFOs
+  and no output FIFOs**; every FIFO crossing costs one cycle (paper, Fig. 3);
+* **round-robin arbitration** per output port (arbitration delay varies
+  between 1 and 5 under contention) with head-of-line blocking;
+* **XY dimension-ordered routing** with the reduced crossbar — the N→E and
+  N→W turns are structurally forbidden (asserted);
+* two independent physical networks: **forward** (requests) and **reverse**
+  (responses/credits); the reverse network is a **sink** — delivered reverse
+  packets are always absorbed immediately;
+* **standard endpoints** with ``max_out_credits_p`` credit counters, an input
+  FIFO of ``fifo_els_p``, line-rate servicing of remote load/store/CAS, and a
+  registered response port (``returned_data_r_o``);
+* the endpoint only services a request when the reverse channel has space,
+  so it can always absorb its own response (the paper's masking rule).
+
+Validated claims (see ``tests/test_netsim.py`` and
+``benchmarks/bench_netsim.py``):
+
+* unloaded 1-hop round trip = **7 cycles** (the ``mesh_master_example.v``
+  log: "cycle 7, returned=00000000"), +2 cycles per extra Manhattan hop;
+* bisection bound: 16 links across the median sustain ~32 remote ops/cycle
+  on a 512-core array — 1 op per 16 cycles per core;
+* store throughput vs credits has its knee at the round-trip BDP
+  (credits = RTT × issue rate), and a fence completes exactly when the
+  credit counter returns to ``max_out_credits_p``;
+* point-to-point transaction ordering holds; the Fig. 5 cross-destination
+  reordering is observable.
+
+The simulator is deliberately numpy (not jit'd JAX): it is the *oracle* the
+JAX layers are tested against, so clarity and exact cycle semantics win over
+device execution. All state updates are start-of-cycle-read /
+end-of-cycle-write, which makes each FIFO crossing exactly one cycle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["NetConfig", "MeshSim", "OP_LOAD", "OP_STORE", "OP_CAS",
+           "P", "W", "E", "N", "S", "unloaded_rtt"]
+
+# bsg_noc_pkg: typedef enum {P=0, W, E, N, S}
+P, W, E, N, S = 0, 1, 2, 3, 4
+NUM_DIRS = 5
+
+OP_LOAD = 0   # ePacketOp_remote_load
+OP_STORE = 1  # ePacketOp_remote_store
+OP_CAS = 2    # ePacketOp_remote_swap_aq/_rl pair, modeled as one CAS
+
+_PKT_FIELDS = ("dst_x", "dst_y", "src_x", "src_y", "addr", "data", "cmp",
+               "op", "tag")
+
+
+def unloaded_rtt(hops: int) -> int:
+    """Analytic unloaded round-trip latency (cycles) at ``hops`` Manhattan
+    distance: inject + hops + deliver-to-endpoint + yumi/service +
+    response-inject + hops + deliver + registered output = ``2*hops + 5``.
+    For 1 hop this is the paper's 7 cycles."""
+    return 2 * hops + 5
+
+
+@dataclasses.dataclass
+class NetConfig:
+    nx: int
+    ny: int
+    router_fifo: int = 4          # input FIFO depth per direction
+    ep_fifo: int = 4              # fifo_els_p of the standard endpoint
+    max_out_credits: int = 16     # max_out_credits_p
+    mem_words: int = 64           # local memory region per tile
+    resp_latency: int = 1         # >=1: "response at least one cycle later"
+    record_log: bool = False      # keep a full per-response log
+
+
+class _Fifos:
+    """Struct-of-arrays circular FIFOs, shape (ny, nx, ports, depth)."""
+
+    def __init__(self, ny: int, nx: int, ports: int, depth: int):
+        self.depth = depth
+        self.f = {k: np.zeros((ny, nx, ports, depth), np.int64)
+                  for k in _PKT_FIELDS}
+        self.head = np.zeros((ny, nx, ports), np.int64)
+        self.count = np.zeros((ny, nx, ports), np.int64)
+
+    def peek(self) -> Dict[str, np.ndarray]:
+        """Head packet of every FIFO, shape (ny, nx, ports) per field."""
+        idx = (self.head % self.depth)[..., None]
+        return {k: np.take_along_axis(v, idx, axis=-1)[..., 0]
+                for k, v in self.f.items()}
+
+    def pop_mask(self, mask: np.ndarray) -> None:
+        """Dequeue head where ``mask`` (ny, nx, ports)."""
+        m = mask.astype(np.int64)
+        self.head = (self.head + m) % self.depth
+        self.count = self.count - m
+
+    def push_mask(self, mask: np.ndarray, pkt: Dict[str, np.ndarray]) -> None:
+        """Enqueue ``pkt`` (fields shaped like mask) where ``mask``; caller
+        must have verified space."""
+        tail = ((self.head + self.count) % self.depth)
+        for k in _PKT_FIELDS:
+            v = self.f[k]
+            np.put_along_axis(
+                v, tail[..., None],
+                np.where(mask, pkt[k], np.take_along_axis(
+                    v, tail[..., None], axis=-1)[..., 0])[..., None],
+                axis=-1)
+        self.count = self.count + mask.astype(np.int64)
+
+    def space(self) -> np.ndarray:
+        return self.count < self.depth
+
+
+class MeshSim:
+    """The full mesh: forward + reverse networks, endpoints, memories."""
+
+    def __init__(self, cfg: NetConfig, seed: int = 0):
+        self.cfg = cfg
+        ny, nx = cfg.ny, cfg.nx
+        self.cycle = 0
+        self.rng = np.random.default_rng(seed)
+        self.fwd = _Fifos(ny, nx, NUM_DIRS, cfg.router_fifo)
+        self.rev = _Fifos(ny, nx, NUM_DIRS, cfg.router_fifo)
+        self.ep_in = _Fifos(ny, nx, 1, cfg.ep_fifo)      # endpoint request FIFO
+        # response delay line: resp_latency slots of (valid + packet)
+        L = cfg.resp_latency
+        self.resp_valid = np.zeros((L, ny, nx), bool)
+        self.resp_pkt = {k: np.zeros((L, ny, nx), np.int64) for k in _PKT_FIELDS}
+        self.mem = np.zeros((ny, nx, cfg.mem_words), np.int64)
+        self.credits = np.full((ny, nx), cfg.max_out_credits, np.int64)
+        self.rr = np.zeros((ny, nx, NUM_DIRS), np.int64)  # fwd round-robin ptrs
+        self.rr_rev = np.zeros((ny, nx, NUM_DIRS), np.int64)
+        # injection program, appended via load_program()
+        self.prog = {k: np.zeros((ny, nx, 0), np.int64) for k in
+                     ("dst_x", "dst_y", "addr", "data", "cmp", "op", "not_before")}
+        self.prog_len = np.zeros((ny, nx), np.int64)
+        self.prog_ptr = np.zeros((ny, nx), np.int64)
+        # registered response port (returned_*_r_o): becomes visible +1 cycle
+        self.reg_valid = np.zeros((ny, nx), bool)
+        self.reg_pkt = {k: np.zeros((ny, nx), np.int64) for k in _PKT_FIELDS}
+        # stats
+        self.completed = np.zeros((ny, nx), np.int64)
+        self.lat_sum = np.zeros((ny, nx), np.int64)
+        self.out_of_credit_cycles = np.zeros((ny, nx), np.int64)
+        self.completed_per_cycle: List[int] = []
+        self.log: List[Tuple[int, int, int, int, int, int]] = []  # (cycle, sy, sx, op, tag, data)
+        ys, xs = np.mgrid[0:ny, 0:nx]
+        self._xs, self._ys = xs, ys
+
+    # ------------------------------------------------------------------
+    # program loading
+    # ------------------------------------------------------------------
+    def load_program(self, entries: Dict[str, np.ndarray]) -> None:
+        """``entries`` fields shaped (ny, nx, L); ``op`` < 0 marks padding.
+
+        ``not_before`` (optional) rate-limits injection to a given cycle.
+        """
+        ny, nx = self.cfg.ny, self.cfg.nx
+        L = entries["op"].shape[-1]
+        for k in self.prog:
+            if k in entries:
+                self.prog[k] = entries[k].astype(np.int64)
+            else:
+                self.prog[k] = np.zeros((ny, nx, L), np.int64)
+        self.prog_len = (entries["op"] >= 0).sum(-1).astype(np.int64)
+        self.prog_ptr = np.zeros((ny, nx), np.int64)
+
+    # ------------------------------------------------------------------
+    # per-cycle pieces
+    # ------------------------------------------------------------------
+    def _route(self, heads: Dict[str, np.ndarray]) -> np.ndarray:
+        """XY dimension-ordered output port for each head packet."""
+        dx, dy = heads["dst_x"], heads["dst_y"]
+        x, y = self._xs[..., None], self._ys[..., None]
+        out = np.where(dx > x, E, np.where(dx < x, W,
+              np.where(dy > y, S, np.where(dy < y, N, P))))
+        return out
+
+    def _router_step(self, net: _Fifos, rr: np.ndarray,
+                     deliver_space: np.ndarray) -> Dict[str, np.ndarray]:
+        """One cycle of every router in one network.
+
+        ``deliver_space`` (ny, nx) — can the P output deliver this cycle.
+        Returns the packets delivered out of the P port (fields + 'valid').
+        """
+        cfg = self.cfg
+        heads = net.peek()
+        valid = net.count > 0                       # (ny, nx, 5)
+        want = self._route(heads)                   # desired output port
+
+        # Structural turn restriction: N must never request E or W.
+        assert not (valid[..., N] & ((want[..., N] == E) | (want[..., N] == W))).any(), \
+            "illegal N->E/W turn generated"
+
+        # Destination space per output port (start-of-cycle, conservative).
+        space = net.space()                         # (ny, nx, 5) input FIFOs
+        out_space = np.zeros((cfg.ny, cfg.nx, NUM_DIRS), bool)
+        out_space[..., P] = deliver_space
+        out_space[:, :-1, E] = space[:, 1:, W]      # east edge: no space
+        out_space[:, 1:, W] = space[:, :-1, E]
+        out_space[:-1, :, S] = space[1:, :, N]
+        out_space[1:, :, N] = space[:-1, :, S]
+
+        # Round-robin arbitration: for each output port o pick the valid
+        # requester with minimal (in_port - rr[o]) mod 5.
+        winners = np.full((cfg.ny, cfg.nx, NUM_DIRS), -1, np.int64)
+        for o in range(NUM_DIRS):
+            cand = valid & (want == o) & out_space[..., o:o + 1]
+            prio = (np.arange(NUM_DIRS)[None, None, :] - rr[..., o:o + 1]) % NUM_DIRS
+            prio = np.where(cand, prio, NUM_DIRS + 1)
+            best = prio.min(-1)
+            win = np.where(best <= NUM_DIRS, prio.argmin(-1), -1)
+            winners[..., o] = win
+            # advance the round-robin pointer past the winner
+            rr[..., o] = np.where(win >= 0, (win + 1) % NUM_DIRS, rr[..., o])
+
+        # Gather winning packets per output port and move them.
+        pop = np.zeros((cfg.ny, cfg.nx, NUM_DIRS), bool)
+        delivered = {k: np.zeros((cfg.ny, cfg.nx), np.int64) for k in _PKT_FIELDS}
+        delivered_valid = np.zeros((cfg.ny, cfg.nx), bool)
+        moved = {}
+        for o in range(NUM_DIRS):
+            win = winners[..., o]
+            has = win >= 0
+            widx = np.clip(win, 0, NUM_DIRS - 1)
+            pkt = {k: np.take_along_axis(heads[k], widx[..., None], -1)[..., 0]
+                   for k in _PKT_FIELDS}
+            np.put_along_axis(pop, widx[..., None],
+                              np.take_along_axis(pop, widx[..., None], -1) | has[..., None],
+                              -1)
+            moved[o] = (has, pkt)
+
+        net.pop_mask(pop)
+
+        # Enqueue into neighbors (each destination FIFO has exactly one feeder).
+        def _push_dir(o, dst_slice, src_slice, in_port):
+            has, pkt = moved[o]
+            mask = np.zeros((cfg.ny, cfg.nx), bool)
+            mask[dst_slice] = has[src_slice]
+            shifted = {k: np.zeros((cfg.ny, cfg.nx), np.int64) for k in _PKT_FIELDS}
+            for k in _PKT_FIELDS:
+                shifted[k][dst_slice] = pkt[k][src_slice]
+            net.push_mask(mask[..., None].repeat(NUM_DIRS, -1) &
+                          (np.arange(NUM_DIRS) == in_port),
+                          {k: v[..., None].repeat(NUM_DIRS, -1) for k, v in shifted.items()})
+
+        _push_dir(E, np.s_[:, 1:], np.s_[:, :-1], W)
+        _push_dir(W, np.s_[:, :-1], np.s_[:, 1:], E)
+        _push_dir(S, np.s_[1:, :], np.s_[:-1, :], N)
+        _push_dir(N, np.s_[:-1, :], np.s_[1:, :], S)
+
+        has_p, pkt_p = moved[P]
+        delivered_valid = has_p
+        delivered = pkt_p
+        delivered["valid"] = delivered_valid
+        return delivered
+
+    # ------------------------------------------------------------------
+    def step(self) -> None:
+        cfg = self.cfg
+        ny, nx = cfg.ny, cfg.nx
+        c = self.cycle
+
+        # ---- registered response port becomes visible (stats record) ----
+        rv = self.reg_valid
+        if rv.any():
+            self.completed += rv
+            lat = c - self.reg_pkt["tag"]
+            self.lat_sum += np.where(rv, lat, 0)
+            if cfg.record_log:
+                for (y, x) in zip(*np.nonzero(rv)):
+                    self.log.append((c, int(y), int(x),
+                                     int(self.reg_pkt["op"][y, x]),
+                                     int(self.reg_pkt["tag"][y, x]),
+                                     int(self.reg_pkt["data"][y, x])))
+        self.completed_per_cycle.append(int(rv.sum()))
+        self.reg_valid = np.zeros((ny, nx), bool)
+
+        # ---- reverse network: route; P deliveries are ALWAYS absorbed ----
+        rdel = self._router_step(self.rev, self.rr_rev,
+                                 deliver_space=np.ones((ny, nx), bool))
+        absorbed = rdel["valid"]
+        # credits return for every reverse packet (commit acknowledgement)
+        self.credits += absorbed.astype(np.int64)
+        # register the data for the core (returned_*_r_o)
+        self.reg_valid = absorbed
+        for k in _PKT_FIELDS:
+            self.reg_pkt[k] = np.where(absorbed, rdel[k], 0)
+
+        # ---- endpoint: inject pending responses into reverse P FIFO ----
+        slot = c % cfg.resp_latency
+        inj = self.resp_valid[slot]
+        if inj.any():
+            mask5 = inj[..., None] & (np.arange(NUM_DIRS) == P)
+            self.rev.push_mask(mask5, {k: self.resp_pkt[k][slot][..., None]
+                                       .repeat(NUM_DIRS, -1) for k in _PKT_FIELDS})
+            self.resp_valid[slot] = False
+
+        # ---- endpoint: service one request/cycle (line rate) ----------
+        # Only service when the reverse channel is guaranteed to have space
+        # at injection time (the paper's request-masking rule).
+        resp_inflight = self.resp_valid.sum(0)
+        rev_space = (self.rev.count[..., P] + resp_inflight) < self.rev.depth
+        can = (self.ep_in.count[..., 0] > 0) & rev_space
+        if can.any():
+            req = {k: v[..., 0] for k, v in self.ep_in.peek().items()}
+            addr = np.clip(req["addr"], 0, cfg.mem_words - 1)
+            yidx, xidx = self._ys, self._xs
+            cur = self.mem[yidx, xidx, addr]
+            is_store = can & (req["op"] == OP_STORE)
+            is_load = can & (req["op"] == OP_LOAD)
+            is_cas = can & (req["op"] == OP_CAS)
+            cas_hit = is_cas & (cur == req["cmp"])
+            newval = np.where(is_store, req["data"],
+                              np.where(cas_hit, req["data"], cur))
+            self.mem[yidx, xidx, addr] = np.where(can, newval, cur)
+            self.ep_in.pop_mask(can[..., None])
+            # response: loads return data, stores return a credit packet,
+            # CAS returns the observed (pre-swap) value.
+            rdata = np.where(is_load, cur, np.where(is_cas, cur, 0))
+            # delay-line slot: with resp_latency L the response is injected
+            # into the reverse network exactly L cycles after service.
+            wslot = c % cfg.resp_latency
+            self.resp_valid[wslot] = np.where(can, True, self.resp_valid[wslot])
+            for k in _PKT_FIELDS:
+                self.resp_pkt[k][wslot] = np.where(can, req[k], self.resp_pkt[k][wslot])
+            # swap src<->dst so the reverse packet routes home
+            self.resp_pkt["dst_x"][wslot] = np.where(can, req["src_x"], self.resp_pkt["dst_x"][wslot])
+            self.resp_pkt["dst_y"][wslot] = np.where(can, req["src_y"], self.resp_pkt["dst_y"][wslot])
+            self.resp_pkt["src_x"][wslot] = np.where(can, self._xs, self.resp_pkt["src_x"][wslot])
+            self.resp_pkt["src_y"][wslot] = np.where(can, self._ys, self.resp_pkt["src_y"][wslot])
+            self.resp_pkt["data"][wslot] = np.where(can, rdata, self.resp_pkt["data"][wslot])
+
+        # ---- forward network: route; P deliveries go to endpoint FIFO ----
+        fdel = self._router_step(self.fwd, self.rr,
+                                 deliver_space=self.ep_in.space()[..., 0])
+        got = fdel["valid"]
+        if got.any():
+            self.ep_in.push_mask(got[..., None],
+                                 {k: fdel[k][..., None] for k in _PKT_FIELDS})
+
+        # ---- master injection from the per-tile program -----------------
+        self.out_of_credit_cycles += ((self.prog_ptr < self.prog_len)
+                                      & (self.credits <= 0)).astype(np.int64)
+        can_inj = (self.prog_ptr < self.prog_len) & (self.credits > 0)
+        if can_inj.any():
+            pidx = np.clip(self.prog_ptr, 0, max(self.prog["op"].shape[-1] - 1, 0))
+            entry = {k: np.take_along_axis(self.prog[k], pidx[..., None], -1)[..., 0]
+                     for k in self.prog}
+            can_inj &= entry["not_before"] <= c
+            can_inj &= self.fwd.space()[..., P]
+            if can_inj.any():
+                pkt = {
+                    "dst_x": entry["dst_x"], "dst_y": entry["dst_y"],
+                    "src_x": self._xs.astype(np.int64), "src_y": self._ys.astype(np.int64),
+                    "addr": entry["addr"], "data": entry["data"],
+                    "cmp": entry["cmp"], "op": entry["op"],
+                    "tag": np.full((ny, nx), c, np.int64),
+                }
+                mask5 = can_inj[..., None] & (np.arange(NUM_DIRS) == P)
+                self.fwd.push_mask(mask5, {k: v[..., None].repeat(NUM_DIRS, -1)
+                                           for k, v in pkt.items()})
+                self.credits -= can_inj.astype(np.int64)
+                self.prog_ptr += can_inj.astype(np.int64)
+
+        self.cycle += 1
+
+    # ------------------------------------------------------------------
+    def run(self, cycles: int) -> None:
+        for _ in range(cycles):
+            self.step()
+
+    def run_until_drained(self, max_cycles: int = 100000) -> int:
+        """Run until all programs issued and all credits returned (global
+        fence); returns the cycle count."""
+        for _ in range(max_cycles):
+            if (self.prog_ptr >= self.prog_len).all() and \
+               (self.credits == self.cfg.max_out_credits).all() and \
+               not self.reg_valid.any():
+                return self.cycle
+            self.step()
+        raise RuntimeError(f"network did not drain in {max_cycles} cycles")
+
+    # ------------------------------------------------------------------
+    def mean_latency(self) -> float:
+        done = self.completed.sum()
+        return float(self.lat_sum.sum()) / max(int(done), 1)
+
+    def throughput(self, warmup: int = 0) -> float:
+        """Completed remote operations per cycle (steady state)."""
+        per = self.completed_per_cycle[warmup:]
+        return float(np.sum(per)) / max(len(per), 1)

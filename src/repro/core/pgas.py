@@ -1,0 +1,168 @@
+"""PGAS remote memory operations over a device mesh (paper C1).
+
+Each tile (device) owns a local ``memory region``; tiles issue
+``remote_store`` / ``remote_load`` / ``remote_cas`` packets addressed by
+``<X, Y, local>``.  On the SPMD side a "packet batch" is a dense,
+destination-major buffer: every source tile provisions ``slots`` packet
+slots toward every destination tile — exactly the paper's FIFO-provisioning
+rule ("N^2 words of FIFO buffering per outstanding transaction") made
+explicit as a static shape.  Delivery is a dimension-ordered all-to-all
+(:func:`repro.core.routing.xy_all_to_all`), i.e. the X-then-Y route of the
+hardware.
+
+Ordering semantics reproduce the paper's *Transaction ordering* section:
+
+* packets from one source to one destination commit in slot order
+  (point-to-point ordering);
+* packets from *different* sources have no ordering guarantee
+  (different slots may interleave arbitrarily) — except for ``remote_cas``
+  where we arbitrate deterministically in (source id, slot) order, the
+  moral equivalent of the router's round-robin arbiter.
+
+All functions run **inside** ``shard_map`` over the (y_axis, x_axis) mesh.
+The reply path (credits for stores, data for loads) is the independent
+reverse network: a second all-to-all phase that by construction can always
+be absorbed (pre-allocated static output buffers — the "sink" property).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .routing import xy_all_to_all
+
+__all__ = ["PacketBatch", "make_packet_batch", "remote_store", "remote_load",
+           "remote_cas", "tile_linear_index"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PacketBatch:
+    """Outgoing packets from one tile, destination-major.
+
+    Fields (``T`` = number of tiles, ``S`` = slots per destination):
+      addr:  (T, S) int32   local word address at the destination
+      data:  (T, S) payload (ignored for loads)
+      mask:  (T, S) bool    slot valid ("out_v_li")
+    """
+
+    addr: jax.Array
+    data: jax.Array
+    mask: jax.Array
+
+    @property
+    def num_tiles(self) -> int:
+        return self.addr.shape[0]
+
+    @property
+    def slots(self) -> int:
+        return self.addr.shape[1]
+
+
+def make_packet_batch(num_tiles: int, slots: int,
+                      dtype=jnp.float32) -> PacketBatch:
+    """An empty (all-invalid) packet batch — the idle endpoint."""
+    return PacketBatch(
+        addr=jnp.zeros((num_tiles, slots), jnp.int32),
+        data=jnp.zeros((num_tiles, slots), dtype),
+        mask=jnp.zeros((num_tiles, slots), bool),
+    )
+
+
+def tile_linear_index(x_axis: str, y_axis: str) -> jax.Array:
+    """This tile's row-major id ``y * nx + x`` (paper Fig. 1 coordinates)."""
+    nx = lax.axis_size(x_axis)
+    return lax.axis_index(y_axis) * nx + lax.axis_index(x_axis)
+
+
+def _deliver(pkts: PacketBatch, x_axis: str, y_axis: str) -> PacketBatch:
+    """Route a packet batch: after this, row ``s`` of each field holds the
+    packets *from* source tile ``s`` addressed to this tile."""
+    return PacketBatch(
+        addr=xy_all_to_all(pkts.addr, x_axis, y_axis, split_axis=0),
+        data=xy_all_to_all(pkts.data, x_axis, y_axis, split_axis=0),
+        mask=xy_all_to_all(pkts.mask, x_axis, y_axis, split_axis=0),
+    )
+
+
+def remote_store(mem: jax.Array, pkts: PacketBatch, x_axis: str,
+                 y_axis: str) -> Tuple[jax.Array, jax.Array]:
+    """Issue remote stores; returns ``(new_mem, credits_returned)``.
+
+    ``credits_returned[t]`` counts this tile's stores acknowledged by tile
+    ``t`` — the reverse-network credit packets.  Because delivery and commit
+    happen inside one SPMD step, the credit is, as the paper requires, a
+    *commit* acknowledgement, not a mere arrival receipt.
+    """
+    inbound = _deliver(pkts, x_axis, y_axis)
+    # Commit in slot order => same-source writes are ordered; cross-source
+    # writes within a slot land in one scatter (unordered, per the paper).
+    for s in range(inbound.slots):
+        mem = _masked_scatter(mem, inbound.addr[:, s], inbound.data[:, s],
+                              inbound.mask[:, s])
+    # Reverse network: one credit per committed packet, returned to sources.
+    acks = inbound.mask.sum(axis=1).astype(jnp.int32)          # per-source
+    credits = xy_all_to_all(acks[:, None], x_axis, y_axis, split_axis=0)
+    return mem, credits[:, 0]
+
+
+def remote_load(mem: jax.Array, pkts: PacketBatch, x_axis: str,
+                y_axis: str) -> Tuple[jax.Array, jax.Array]:
+    """Issue remote loads; returns ``(data, valid)`` both shaped (T, S),
+    row ``t`` holding the responses from destination tile ``t`` in slot
+    (request) order — the ``returned_data_r_o`` port of the endpoint.
+    """
+    inbound = _deliver(pkts, x_axis, y_axis)
+    addr = jnp.clip(inbound.addr, 0, mem.shape[0] - 1)
+    loaded = jnp.where(inbound.mask, mem[addr], jnp.zeros((), mem.dtype))
+    # Reverse network: responses travel back along the independent path.
+    data = xy_all_to_all(loaded, x_axis, y_axis, split_axis=0)
+    valid = xy_all_to_all(inbound.mask, x_axis, y_axis, split_axis=0)
+    return data, valid
+
+
+def remote_cas(mem: jax.Array, pkts: PacketBatch, compare: jax.Array,
+               x_axis: str, y_axis: str) -> Tuple[jax.Array, jax.Array]:
+    """Remote compare-and-swap (``ePacketOp_remote_swap_*``).
+
+    ``pkts.data`` carries the swap value, ``compare`` (T, S) the expected
+    value.  Returns ``(new_mem, old_values)`` where ``old_values[t, s]`` is
+    what the CAS at destination ``t`` slot ``s`` observed (the mutex
+    winner sees the unlocked value).  Arbitration is deterministic in
+    (source, slot) order — the round-robin arbiter's role.
+    """
+    inbound = _deliver(pkts, x_axis, y_axis)
+    cmp_in = xy_all_to_all(compare, x_axis, y_axis, split_axis=0)
+
+    T, S = inbound.addr.shape
+    flat_addr = inbound.addr.reshape(-1)
+    flat_data = inbound.data.reshape(-1)
+    flat_cmp = cmp_in.reshape(-1)
+    flat_mask = inbound.mask.reshape(-1)
+
+    def body(i, carry):
+        m, old = carry
+        a = jnp.clip(flat_addr[i], 0, m.shape[0] - 1)
+        cur = m[a]
+        hit = flat_mask[i] & (cur == flat_cmp[i])
+        m = m.at[a].set(jnp.where(hit, flat_data[i], cur))
+        old = old.at[i].set(jnp.where(flat_mask[i], cur, jnp.zeros((), m.dtype)))
+        return m, old
+
+    old0 = lax.pcast(jnp.zeros(T * S, mem.dtype), (x_axis, y_axis), to="varying")
+    mem, old = lax.fori_loop(0, T * S, body, (mem, old0))
+    old = xy_all_to_all(old.reshape(T, S), x_axis, y_axis, split_axis=0)
+    return mem, old
+
+
+def _masked_scatter(mem: jax.Array, addr: jax.Array, data: jax.Array,
+                    mask: jax.Array) -> jax.Array:
+    """Scatter ``data`` into ``mem`` at ``addr`` where ``mask``; invalid
+    slots are routed to a sacrificial out-of-range index and dropped."""
+    sink = jnp.asarray(mem.shape[0], jnp.int32)
+    idx = jnp.where(mask, jnp.clip(addr, 0, mem.shape[0] - 1), sink)
+    return mem.at[idx].set(data.astype(mem.dtype), mode="drop")

@@ -1,0 +1,175 @@
+"""Dimension-ordered (XY) routing expressed as JAX collectives (paper C4).
+
+The BaseJump router moves a packet all the way along X, then along Y.  A TPU
+pod's ICI fabric routes the same way, so we express every long-range
+communication pattern in the framework as *per-axis phases*:
+
+* ``xy_all_to_all``      — all-to-all over the combined (X, Y) group as an
+                           X-phase ``all_to_all`` followed by a Y-phase
+                           ``all_to_all``  (MoE dispatch / global shuffle).
+* ``xy_all_reduce``      — hierarchical all-reduce: reduce along X rows, then
+                           along Y columns (gradient reduction).
+* ``xy_reduce_scatter`` / ``xy_all_gather`` — the matching two-phase forms.
+* ``shift``              — single-hop neighbor ``ppermute`` (token queues,
+                           pipeline channels).
+
+All functions must be called **inside** a ``shard_map`` (they use named
+axes).  They are pure jnp/lax — no Pallas — because the paper's contribution
+here is the *schedule*, not the arithmetic.
+
+The module also carries the hop-count cost model used by the roofline
+collective term: on an ``nx x ny`` mesh, a dimension-ordered all-to-all of
+``B`` bytes per device crosses the X bisection with ``B * nx/4`` bytes per
+row and the Y bisection with ``B * ny/4`` per column (uniform traffic).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = [
+    "shift",
+    "ring_neighbors",
+    "xy_all_to_all",
+    "xy_all_reduce",
+    "xy_reduce_scatter",
+    "xy_all_gather",
+    "axis_all_to_all",
+    "a2a_phase_cost",
+    "allreduce_cost",
+]
+
+
+# ---------------------------------------------------------------------------
+# Single-hop primitives (the "link protocol"): neighbor shifts on one axis.
+# ---------------------------------------------------------------------------
+
+def ring_neighbors(axis_size: int, shift_by: int = 1) -> list:
+    """Source->dest pairs for a ``ppermute`` ring shift along one axis."""
+    return [(i, (i + shift_by) % axis_size) for i in range(axis_size)]
+
+
+def shift(x: jax.Array, axis_name: str, shift_by: int = 1) -> jax.Array:
+    """Move ``x`` to the ``shift_by``-hop neighbor along ``axis_name``.
+
+    This is the forward-path link: one ``ppermute`` hop.  Token queues and
+    the pipeline schedule are built from it.
+    """
+    size = lax.axis_size(axis_name)
+    return lax.ppermute(x, axis_name, perm=ring_neighbors(size, shift_by))
+
+
+# ---------------------------------------------------------------------------
+# Phase collectives along a single axis.
+# ---------------------------------------------------------------------------
+
+def axis_all_to_all(x: jax.Array, axis_name: str, split_axis: int,
+                    concat_axis: int, *, tiled: bool = True) -> jax.Array:
+    """One routing phase: all-to-all along a single mesh axis."""
+    return lax.all_to_all(x, axis_name, split_axis=split_axis,
+                          concat_axis=concat_axis, tiled=tiled)
+
+
+# ---------------------------------------------------------------------------
+# XY (dimension-ordered) composite collectives.
+# ---------------------------------------------------------------------------
+
+def xy_all_to_all(x: jax.Array, x_axis: str, y_axis: str, *,
+                  split_axis: int = 0, concat_axis: int = 0) -> jax.Array:
+    """All-to-all over the combined (x_axis × y_axis) device group, routed
+    dimension-ordered: X phase first, then Y phase.
+
+    ``x``'s ``split_axis`` must be divisible by ``|X| * |Y|``.  Each device
+    ends up with the blocks destined to it from every other device, exactly
+    as a flat all-to-all over the product group would produce, but the HLO
+    contains two smaller-group ``all-to-all`` ops whose traffic follows mesh
+    rows then mesh columns (matching ICI hardware routing, so no link is
+    traversed twice — the paper's argument for dimension-ordered routing).
+
+    Layout contract: the ``split_axis`` dimension is ordered as
+    ``(Y_dest, X_dest, ...)`` — i.e. destination = row-major
+    ``(y, x)`` tile id, consistent with ``GridSpec.tile_id``.
+    """
+    nx = lax.axis_size(x_axis)
+    ny = lax.axis_size(y_axis)
+    n = x.shape[split_axis]
+    if n % (nx * ny):
+        raise ValueError(f"split dim {n} not divisible by mesh {nx}x{ny}")
+
+    # Phase 1 (X): deliver to the correct column.  Blocks for destination
+    # (y_d, x_d) travel to column x_d, staying in this row.
+    # Reshape split dim (Y, X, rest) -> move X to front for the X-phase a2a.
+    lead = list(range(x.ndim))
+    xs = jnp.moveaxis(x, split_axis, 0)
+    rest = xs.shape[1:]
+    xs = xs.reshape((ny, nx, n // (nx * ny)) + rest)
+    xs = jnp.swapaxes(xs, 0, 1)                       # (X, Y, blk, ...)
+    xs = xs.reshape((nx, ny * (n // (nx * ny))) + rest)
+    xs = lax.all_to_all(xs, x_axis, split_axis=0, concat_axis=0, tiled=True)
+
+    # Phase 2 (Y): within each column, deliver to the correct row.
+    xs = xs.reshape((nx, ny, n // (nx * ny)) + rest)
+    xs = jnp.swapaxes(xs, 0, 1)                       # (Y, X, blk, ...)
+    xs = xs.reshape((ny, nx * (n // (nx * ny))) + rest)
+    xs = lax.all_to_all(xs, y_axis, split_axis=0, concat_axis=0, tiled=True)
+
+    xs = xs.reshape((n,) + rest)
+    return jnp.moveaxis(xs, 0, split_axis)
+
+
+def xy_all_reduce(x: jax.Array, x_axis: str, y_axis: str) -> jax.Array:
+    """Hierarchical all-reduce: reduce along mesh rows (X) then columns (Y).
+
+    Semantically equal to ``psum(x, (x_axis, y_axis))`` but lowers to two
+    smaller-group all-reduces whose traffic is dimension-ordered.
+    """
+    return lax.psum(lax.psum(x, x_axis), y_axis)
+
+
+def xy_reduce_scatter(x: jax.Array, x_axis: str, y_axis: str,
+                      scatter_dim: int = 0) -> jax.Array:
+    """Two-phase reduce-scatter (X phase then Y phase) along ``scatter_dim``."""
+    x = lax.psum_scatter(x, x_axis, scatter_dimension=scatter_dim, tiled=True)
+    return lax.psum_scatter(x, y_axis, scatter_dimension=scatter_dim, tiled=True)
+
+
+def xy_all_gather(x: jax.Array, x_axis: str, y_axis: str,
+                  gather_dim: int = 0) -> jax.Array:
+    """Two-phase all-gather: Y phase then X phase (reverse path order)."""
+    x = lax.all_gather(x, y_axis, axis=gather_dim, tiled=True)
+    return lax.all_gather(x, x_axis, axis=gather_dim, tiled=True)
+
+
+# ---------------------------------------------------------------------------
+# Cost model (used by launch/roofline.py).  Link bandwidth in bytes/s.
+# ---------------------------------------------------------------------------
+
+def a2a_phase_cost(bytes_per_device: float, axis_size: int,
+                   link_bw: float, *, torus: bool = True) -> float:
+    """Seconds for one all-to-all phase along a ring/torus axis.
+
+    Uniform all-to-all on a ring of ``k`` devices moves ``B*(k-1)/k`` bytes
+    off each device; the bisection-limited time on a (bidirectional) torus
+    ring is ``B * k / (8 if torus else 4) / link_bw`` (paper's bisection
+    argument: traffic crossing the median limits throughput).
+    """
+    k = axis_size
+    if k <= 1:
+        return 0.0
+    cut = 4 * link_bw if torus else 2 * link_bw  # 2 links x 2 dirs (torus)
+    # bytes crossing one bisection: each of k devices sends B*(k/2)/k ~ B/2
+    # across the cut on average => k*B/4 each way.
+    return (bytes_per_device * k / 4.0) / cut
+
+
+def allreduce_cost(bytes_per_device: float, axis_size: int,
+                   link_bw: float, *, torus: bool = True) -> float:
+    """Seconds for a ring all-reduce along one axis (2(k-1)/k * B / links)."""
+    k = axis_size
+    if k <= 1:
+        return 0.0
+    lanes = 2 * link_bw if torus else link_bw  # both ring directions usable
+    return 2.0 * (k - 1) / k * bytes_per_device / lanes

@@ -1,0 +1,91 @@
+"""Packet-based synchronization primitives (paper C8).
+
+"Other high-level primitives like mutex, barrier and spin-lock can layer on
+top of the built-in atomic compare-and-swap" — we build exactly those on top
+of :func:`repro.core.pgas.remote_cas`, distributable to any tile at runtime.
+
+In a single jitted SPMD step there are no data races, so these primitives
+matter in two places: (1) the protocol layer / netsim, where they validate
+the paper's design; (2) across steps in the launcher (multi-controller
+coordination), where :func:`spmd_barrier` — a psum of tokens, the collective
+analogue of the credit-drain barrier — is used for real.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import pgas
+
+__all__ = ["mutex_try_acquire", "mutex_release", "barrier_arrive",
+           "barrier_done", "spmd_barrier", "MUTEX_UNLOCKED"]
+
+MUTEX_UNLOCKED = 0
+
+
+def mutex_try_acquire(mem: jax.Array, owner_tile: jax.Array, lock_addr: int,
+                      x_axis: str, y_axis: str,
+                      num_tiles: int) -> Tuple[jax.Array, jax.Array]:
+    """Every tile attempts ``CAS(lock, UNLOCKED -> my_id+1)`` on the lock
+    word that lives at ``owner_tile``; returns ``(mem, acquired)`` where
+    exactly one tile observes ``acquired``.
+    """
+    me = pgas.tile_linear_index(x_axis, y_axis)
+    pkts = pgas.make_packet_batch(num_tiles, 1, mem.dtype)
+    onehot = (jnp.arange(num_tiles) == owner_tile)[:, None]
+    pkts = pgas.PacketBatch(
+        addr=jnp.full((num_tiles, 1), lock_addr, jnp.int32),
+        data=jnp.broadcast_to((me + 1).astype(mem.dtype), (num_tiles, 1)),
+        mask=onehot,
+    )
+    compare = jnp.full((num_tiles, 1), MUTEX_UNLOCKED, mem.dtype)
+    mem, old = pgas.remote_cas(mem, pkts, compare, x_axis, y_axis)
+    # old[t, 0] is the pre-CAS value seen at destination t; we acquired iff
+    # the CAS we sent observed UNLOCKED.
+    saw = jnp.take_along_axis(old, owner_tile[None, None].astype(jnp.int32),
+                              axis=0)[0, 0]
+    return mem, saw == MUTEX_UNLOCKED
+
+
+def mutex_release(mem: jax.Array, owner_tile: jax.Array, lock_addr: int,
+                  holding: jax.Array, x_axis: str, y_axis: str,
+                  num_tiles: int) -> jax.Array:
+    """The holder stores UNLOCKED back to the lock word (a remote store)."""
+    pkts = pgas.PacketBatch(
+        addr=jnp.full((num_tiles, 1), lock_addr, jnp.int32),
+        data=jnp.full((num_tiles, 1), MUTEX_UNLOCKED, mem.dtype),
+        mask=((jnp.arange(num_tiles) == owner_tile)[:, None]) & holding,
+    )
+    mem, _ = pgas.remote_store(mem, pkts, x_axis, y_axis)
+    return mem
+
+
+def barrier_arrive(mem: jax.Array, root_tile: jax.Array, counter_addr: int,
+                   x_axis: str, y_axis: str, num_tiles: int) -> jax.Array:
+    """Multi-node barrier via remote stores: each tile stores a 1 into its
+    own slot of the root tile's arrival vector (the paper's "multi-node
+    barriers performed efficiently with remote stores")."""
+    me = pgas.tile_linear_index(x_axis, y_axis)
+    pkts = pgas.PacketBatch(
+        addr=jnp.broadcast_to(counter_addr + me, (num_tiles, 1)).astype(jnp.int32),
+        data=jnp.ones((num_tiles, 1), mem.dtype),
+        mask=(jnp.arange(num_tiles) == root_tile)[:, None],
+    )
+    mem, _ = pgas.remote_store(mem, pkts, x_axis, y_axis)
+    return mem
+
+
+def barrier_done(mem: jax.Array, counter_addr: int, num_tiles: int) -> jax.Array:
+    """Root-side check: all arrival slots set."""
+    return (mem[counter_addr:counter_addr + num_tiles] != 0).all()
+
+
+def spmd_barrier(x_axis: str, y_axis: str) -> jax.Array:
+    """Collective barrier used across real steps: every device contributes a
+    token; returns the tile count (equals nx*ny when everyone arrived —
+    which SPMD guarantees, making this also a liveness probe)."""
+    one = jnp.ones((), jnp.int32)
+    return lax.psum(lax.psum(one, x_axis), y_axis)

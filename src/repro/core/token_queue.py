@@ -1,0 +1,114 @@
+"""Token queues — credit-bounded virtual channels (paper C6, "Option 1").
+
+A token queue virtualizes a producer->consumer channel over the load/store
+network: the producer holds ``depth`` send tokens; each send consumes one,
+each consumer dequeue returns one (via the reverse network).  The producer
+therefore never overruns the consumer's buffer, and messages never back up
+into the shared network — the congestion-avoidance property the paper builds
+pipelines of filters on.
+
+Here the queue state is a JAX ring buffer, and in the distributed setting the
+channel endpoints are *mesh neighbors* connected by
+:func:`repro.core.routing.shift` (one ``ppermute`` hop).  Pipeline
+parallelism (`repro/parallel/pipeline.py`) is a chain of these channels with
+``depth`` = the paper's Option-2 sizing: in-flight microbatches = consumer
+FIFO capacity.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .routing import shift
+
+__all__ = ["TokenQueue", "tq_make", "tq_send", "tq_recv", "tq_can_send",
+           "tq_can_recv", "channel_send", "channel_recv"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TokenQueue:
+    """Ring-buffer token queue.
+
+    buf:     (depth, *item_shape) payload storage
+    head:    scalar int32 — next slot to dequeue
+    count:   scalar int32 — occupied slots
+    tokens:  scalar int32 — producer-side send tokens (credits)
+    """
+
+    buf: jax.Array
+    head: jax.Array
+    count: jax.Array
+    tokens: jax.Array
+
+    @property
+    def depth(self) -> int:
+        return self.buf.shape[0]
+
+    def replace(self, **kw):
+        return dataclasses.replace(self, **kw)
+
+
+def tq_make(depth: int, item_shape: Tuple[int, ...], dtype=jnp.float32) -> TokenQueue:
+    return TokenQueue(
+        buf=jnp.zeros((depth,) + tuple(item_shape), dtype),
+        head=jnp.zeros((), jnp.int32),
+        count=jnp.zeros((), jnp.int32),
+        tokens=jnp.asarray(depth, jnp.int32),
+    )
+
+
+def tq_can_send(q: TokenQueue) -> jax.Array:
+    return q.tokens > 0
+
+
+def tq_can_recv(q: TokenQueue) -> jax.Array:
+    return q.count > 0
+
+
+def tq_send(q: TokenQueue, item: jax.Array, do: jax.Array | bool = True
+            ) -> TokenQueue:
+    """Enqueue ``item`` if ``do`` and a token is available (masked no-op
+    otherwise — SPMD-friendly).  Consumes one send token."""
+    do = jnp.asarray(do) & tq_can_send(q)
+    tail = (q.head + q.count) % q.depth
+    buf = lax.cond(
+        do,
+        lambda b: lax.dynamic_update_index_in_dim(b, item.astype(b.dtype), tail, 0),
+        lambda b: b,
+        q.buf)
+    inc = do.astype(jnp.int32)
+    return q.replace(buf=buf, count=q.count + inc, tokens=q.tokens - inc)
+
+
+def tq_recv(q: TokenQueue, do: jax.Array | bool = True
+            ) -> Tuple[TokenQueue, jax.Array, jax.Array]:
+    """Dequeue; returns ``(queue, item, valid)``.  The freed slot's token
+    returns to the producer (instantly here; via the reverse network in the
+    distributed channel)."""
+    do = jnp.asarray(do) & tq_can_recv(q)
+    item = lax.dynamic_index_in_dim(q.buf, q.head % q.depth, 0, keepdims=False)
+    dec = do.astype(jnp.int32)
+    q = q.replace(head=(q.head + dec) % q.depth, count=q.count - dec,
+                  tokens=q.tokens + dec)
+    return q, item, do
+
+
+# ---------------------------------------------------------------------------
+# Distributed channel: neighbor-to-neighbor token queue over one mesh axis.
+# Every device runs both roles SPMD-style; the payload moves one hop down the
+# ring, the token (credit) moves one hop up.
+# ---------------------------------------------------------------------------
+
+def channel_send(item: jax.Array, axis_name: str) -> jax.Array:
+    """Forward path: push ``item`` to the next stage along ``axis_name``."""
+    return shift(item, axis_name, +1)
+
+
+def channel_recv(token: jax.Array, axis_name: str) -> jax.Array:
+    """Reverse path: return a credit/token to the previous stage."""
+    return shift(token, axis_name, -1)

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the compute hot spots.
+
+Each kernel lives in ``<name>.py`` (pl.pallas_call + explicit BlockSpec VMEM
+tiling), with ``ops.py`` providing the jit'd public wrappers (padding,
+interpret-mode fallback on CPU, custom VJPs) and ``ref.py`` the pure-jnp
+oracles the tests sweep against.
+"""
+from .ops import flash_attention_op, grouped_matmul, ssd_scan_op  # noqa: F401
+from . import ref  # noqa: F401

@@ -1,0 +1,134 @@
+"""Flash attention as a Pallas TPU kernel.
+
+TPU adaptation of the standard flash algorithm: the grid is
+``(batch, q_heads, q_blocks, kv_blocks)`` with the KV dimension innermost —
+TPU grid steps execute *sequentially*, so the online-softmax statistics live
+in VMEM scratch that persists across KV iterations (no atomics, no
+inter-block communication — the mesh-network lesson: keep state local,
+stream the data past it).
+
+Block shapes are MXU-aligned: ``block_q x head_dim`` and
+``block_k x head_dim`` tiles with ``head_dim`` padded to a multiple of 128
+by the ops.py wrapper.  VMEM working set per step:
+``block_q*hd (q) + 2*block_k*hd (k,v) + block_q*hd (acc) + block_q*block_k``
+floats — about 2.4 MB at the default 512/512 fp32 blocks, comfortably inside
+the ~16 MB VMEM budget.
+
+GQA is handled in the BlockSpec index maps (the K/V block index maps a query
+head to its KV head), so KV is never materialized repeated in HBM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  sm_scale: float, causal: bool, window: Optional[int],
+                  block_q: int, block_k: int, kv_len: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * sm_scale       # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (bk, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        mask = k_pos < kv_len                                # padded tail
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_ref[...]                                  # (bq,)
+        m_cur = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        p = jnp.where(mask, p, 0.0)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+        m_ref[...] = m_cur
+        v = v_ref[0, 0].astype(jnp.float32)                  # (bk, hd)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+
+    if causal:
+        # skip fully-masked KV blocks (the block-sparse fast path)
+        pl.when(ik * block_k <= iq * block_q + block_q - 1)(_body)
+    else:
+        _body()
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    block_q: int = 512, block_k: int = 512,
+                    kv_len: Optional[int] = None,
+                    sm_scale: Optional[float] = None,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, H, Sq, hd); k/v: (B, K, Sk, hd) with H % K == 0.
+
+    Shapes must be pre-padded: Sq % block_q == 0, Sk % block_k == 0 and
+    hd % 128 == 0 (ops.py does this).  ``kv_len`` masks the padded KV tail.
+    """
+    b, h, sq, hd = q.shape
+    _, kh, sk, _ = k.shape
+    assert h % kh == 0, (h, kh)
+    group = h // kh
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
+    nq, nk = sq // block_q, sk // block_k
+    kv_len = sk if kv_len is None else kv_len
+
+    kernel = functools.partial(
+        _flash_kernel, sm_scale=sm_scale if sm_scale is not None else hd ** -0.5,
+        causal=causal, window=window,
+        block_q=block_q, block_k=block_k, kv_len=kv_len)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b_, h_, iq, ik, g=group: (b_, h_ // g, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b_, h_, iq, ik, g=group: (b_, h_ // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, hd), q.dtype),
+        # fp32 online-softmax state; persists across the (innermost) kv dim
+        scratch_shapes=_scratch(block_q, hd),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _scratch(block_q: int, hd: int):
+    from jax.experimental.pallas import tpu as pltpu
+    return [
+        pltpu.VMEM((block_q, hd), jnp.float32),   # acc
+        pltpu.VMEM((block_q,), jnp.float32),      # m (running max)
+        pltpu.VMEM((block_q,), jnp.float32),      # l (running denominator)
+    ]

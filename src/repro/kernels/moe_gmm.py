@@ -1,0 +1,69 @@
+"""Grouped (expert) matmul as a Pallas TPU kernel.
+
+Computes ``out[e] = lhs[e] @ rhs[e]`` for E experts — the compute core of
+the MoE FFN over capacity buffers.  Grid is
+``(experts, rows_blocks, cols_blocks, k_blocks)`` with the contraction dim
+innermost, accumulating into a VMEM fp32 scratch tile; MXU-aligned
+``block_m x block_k`` / ``block_k x block_n`` tiles.
+
+Unlike megablocks-style ragged GMM, the capacity-buffer layout (paper C2:
+pre-provisioned FIFOs) makes every expert's tile count *static* — no
+dynamic shapes, no host-side grouping metadata.  Padding rows (dropped
+tokens / unused capacity) multiply zeros.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(lhs_ref, rhs_ref, out_ref, acc_ref):
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        lhs_ref[0].astype(jnp.float32), rhs_ref[0].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        out_ref[0] = acc_ref[...].astype(out_ref.dtype)
+
+
+def grouped_matmul_pallas(lhs: jax.Array, rhs: jax.Array, *,
+                          block_m: int = 128, block_n: int = 128,
+                          block_k: int = 512,
+                          interpret: bool = False) -> jax.Array:
+    """lhs: (E, M, K); rhs: (E, K, N) -> (E, M, N).
+
+    M/N/K must be multiples of the block sizes (ops.py pads).
+    """
+    e, m, k = lhs.shape
+    _, _, n = rhs.shape
+    assert rhs.shape[:2] == (e, k), (lhs.shape, rhs.shape)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, \
+        (m, n, k, block_m, block_n, block_k)
+
+    return pl.pallas_call(
+        _gmm_kernel,
+        grid=(e, m // block_m, n // block_n, k // block_k),
+        in_specs=[
+            pl.BlockSpec((1, block_m, block_k),
+                         lambda e_, im, in_, ik: (e_, im, ik)),
+            pl.BlockSpec((1, block_k, block_n),
+                         lambda e_, im, in_, ik: (e_, ik, in_)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m, block_n),
+                               lambda e_, im, in_, ik: (e_, im, in_)),
+        out_shape=jax.ShapeDtypeStruct((e, m, n), lhs.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(lhs, rhs)

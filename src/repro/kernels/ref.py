@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        kv_len: Optional[int] = None) -> jax.Array:
+    """q: (B, H, Sq, hd); k/v: (B, K, Sk, hd).  Full-softmax reference."""
+    b, h, sq, hd = q.shape
+    _, kh, sk, _ = k.shape
+    group = h // kh
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (hd ** -0.5)
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if kv_len is not None:
+        mask &= k_pos < kv_len
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, B, C, A) -> jax.Array:
+    """Naive sequential SSD recurrence (the definition, token by token).
+
+    x: (b, h, S, P); dt: (b, h, S); B/C: (b, g, S, N); A: (h,)
+    """
+    b, h, s, p = x.shape
+    _, g, _, n = B.shape
+    hg = h // g
+    Bh = jnp.repeat(B, hg, axis=1)
+    Ch = jnp.repeat(C, hg, axis=1)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp           # (b,h,p), (b,h), (b,h,n), (b,h,n)
+        decay = jnp.exp(dtt * Af[None, :])[..., None, None]    # (b,h,1,1)
+        upd = jnp.einsum("bhn,bhp->bhnp", bt, xt * dtt[..., None])
+        state = decay * state + upd
+        y = jnp.einsum("bhn,bhnp->bhp", ct, state)
+        return state, y
+
+    state0 = jnp.zeros((b, h, n, p), jnp.float32)
+    xs = (xf.transpose(2, 0, 1, 3), dtf.transpose(2, 0, 1),
+          Bh.transpose(2, 0, 1, 3).astype(jnp.float32),
+          Ch.transpose(2, 0, 1, 3).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, state0, xs)
+    return ys.transpose(1, 2, 0, 3).astype(x.dtype)
+
+
+def grouped_matmul_ref(lhs, rhs) -> jax.Array:
+    """(E, M, K) @ (E, K, N) -> (E, M, N) in fp32 accumulation."""
+    out = jnp.einsum("emk,ekn->emn", lhs.astype(jnp.float32),
+                     rhs.astype(jnp.float32))
+    return out.astype(lhs.dtype)

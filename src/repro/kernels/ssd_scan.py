@@ -1,0 +1,119 @@
+"""Mamba-2 SSD (state-space duality) chunked scan as a Pallas TPU kernel.
+
+The SSD computation for one head:
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t x_t^T      (state: (N, P))
+    y_t = C_t^T h_t
+
+Chunked form (chunk length Q): within a chunk the quadratic "attention-like"
+path computes the intra-chunk contribution with the decay matrix
+``L[i,j] = exp(cumA_i - cumA_j)`` (i >= j), while the inter-chunk
+contribution flows through the carried state.
+
+TPU mapping: grid ``(batch, heads, chunks)`` with the *chunk* dimension
+innermost — TPU grid steps run sequentially, so the inter-chunk state lives
+in a VMEM scratch accumulator carried across chunk iterations.  This is the
+same stream-past-local-state pattern as the flash kernel, and it is why the
+kernel needs no global synchronization: the recurrence is a token queue of
+depth one between consecutive chunks.
+
+Block shapes: x (Q, P), B/C (Q, N), state (N, P); with the default
+Q=256, P=64, N=128 the working set is ~0.5 MB fp32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, y_ref, state_ref, *,
+                chunk: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)          # (Q, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)        # (Q,)
+    bmat = b_ref[0, 0].astype(jnp.float32)       # (Q, N)
+    cmat = c_ref[0, 0].astype(jnp.float32)       # (Q, N)
+    a = a_ref[0, 0]                              # scalar: A (negative)
+
+    dA = dt * a                                  # (Q,) log-decay per step
+    cum = jnp.cumsum(dA)                         # inclusive cumsum
+    # decay from step j (exclusive) to step i (inclusive): exp(cum_i - cum_j)
+    li = cum[:, None] - cum[None, :]             # (Q, Q)
+    iota_q = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    iota_k = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    # mask before exp (masked entries have positive, overflowing exponents)
+    L = jnp.exp(jnp.where(iota_k <= iota_q, li, -1e30))
+
+    # intra-chunk (quadratic) path: y_intra = ((C B^T) * L) @ (dt * x)
+    cb = jax.lax.dot_general(cmat, bmat, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q, Q)
+    xdt = x * dt[:, None]
+    y = jax.lax.dot_general(cb * L, xdt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (Q, P)
+
+    # inter-chunk path: y_inter_i = exp(cum_i) * C_i @ state_in
+    state_in = state_ref[...]                    # (N, P)
+    y_inter = jax.lax.dot_general(cmat * jnp.exp(cum)[:, None], state_in,
+                                  (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    y_ref[0, 0] = (y + y_inter).astype(y_ref.dtype)
+
+    # state update: state_out = exp(cum_Q) * state_in
+    #             + sum_i exp(cum_Q - cum_i) * B_i (dt_i x_i)^T
+    total = cum[chunk - 1]
+    decay_out = jnp.exp(total - cum)             # (Q,)
+    state_new = jax.lax.dot_general(bmat * decay_out[:, None], xdt,
+                                    (((0,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+    state_ref[...] = jnp.exp(total) * state_in + state_new
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, B: jax.Array, C: jax.Array,
+             A: jax.Array, *, chunk: int = 256,
+             interpret: bool = False) -> jax.Array:
+    """SSD over a full sequence.
+
+    x:  (batch, heads, S, P)   — per-head inputs (dt NOT yet applied)
+    dt: (batch, heads, S)      — positive step sizes
+    B:  (batch, groups, S, N)  — input projections (groups divide heads)
+    C:  (batch, groups, S, N)  — output projections
+    A:  (heads,)               — negative per-head decay rates
+    Returns y: (batch, heads, S, P).  S must be a multiple of ``chunk``
+    (ops.py pads).
+    """
+    b, h, s, p = x.shape
+    _, g, _, n = B.shape
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    hg = h // g
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    a2 = jnp.broadcast_to(A.astype(jnp.float32)[None, :], (b, h))
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda b_, h_, c_: (b_, h_, c_, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda b_, h_, c_: (b_, h_, c_)),
+            pl.BlockSpec((1, 1, chunk, n),
+                         lambda b_, h_, c_, hg_=hg: (b_, h_ // hg_, c_, 0)),
+            pl.BlockSpec((1, 1, chunk, n),
+                         lambda b_, h_, c_, hg_=hg: (b_, h_ // hg_, c_, 0)),
+            pl.BlockSpec((1, 1), lambda b_, h_, c_: (b_, h_)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, p),
+                               lambda b_, h_, c_: (b_, h_, c_, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],  # carried state
+        interpret=interpret,
+    )(x, dt, B, C, a2)

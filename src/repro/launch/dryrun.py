@@ -1,0 +1,150 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture × input shape) cell on the production meshes, prove it fits,
+and extract the roofline terms.
+
+The two lines above MUST run before any other import: jax locks the device
+count on first backend initialization, and the dry-run needs 512 host
+placeholder devices to build the 16×16 and 2×16×16 meshes.  Tests and
+benchmarks never import this module (they see 1–8 devices).
+
+Usage:
+  python -m repro.launch.dryrun --arch stablelm-3b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh pod        # 40-cell baseline
+  python -m repro.launch.dryrun --all --mesh multipod   # 2-pod pass
+Outputs one JSON per cell under experiments/dryrun/<mesh>/.
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import SHAPES, get_config, list_archs
+from repro.launch import costing
+from repro.launch import roofline as rl
+from repro.launch import step as step_mod
+from repro.launch.mesh import make_production_mesh
+
+OUT_ROOT = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             strategy: str = "baseline", verbose: bool = True,
+             with_cost: bool = True, **rule_overrides) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = step_mod.cell_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped", "reason": why}
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multipod"))
+    chips = mesh.devices.size
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "strategy": strategy, "chips": chips}
+    try:
+        with mesh:
+            cell = step_mod.build_cell(cfg, shape, mesh, strategy,
+                                       **rule_overrides)
+            lowered = cell.lower()
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+        mem = compiled.memory_analysis()
+        rec.update(
+            status="ok",
+            lower_s=round(t1 - t0, 2), compile_s=round(t2 - t1, 2),
+            memory=_mem_dict(mem),
+            memory_analytic=costing.analytic_memory(cfg, shape, cell.rules,
+                                                    chips),
+        )
+        if with_cost:
+            # exact per-device cost terms via unrolled 1/2-trip variants
+            # (cost_analysis counts a scanned body once — see costing.py)
+            cost, colls = costing.measure_cell_cost(
+                cfg, shape, mesh, strategy, **rule_overrides)
+            rep = rl.roofline(cfg, shape, mesh_name, chips, cost, colls)
+            rec.update(cost=cost, roofline=rep.to_json())
+            if verbose:
+                print(rep.summary(), flush=True)
+        elif verbose:
+            print(f"{arch:>22s} {shape_name:<12s} {mesh_name:<9s} "
+                  f"compiled OK in {t2 - t1:.0f}s", flush=True)
+        if verbose and mem is not None:
+            print(f"  per-device bytes: args={getattr(mem, 'argument_size_in_bytes', 0):.3e} "
+                  f"out={getattr(mem, 'output_size_in_bytes', 0):.3e} "
+                  f"temp={getattr(mem, 'temp_size_in_bytes', 0):.3e}",
+                  flush=True)
+    except Exception as e:  # a failure here is a bug in our sharding
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        if verbose:
+            print(f"{arch:>22s} {shape_name:<12s} {mesh_name:<9s} "
+                  f"FAILED: {type(e).__name__}: {str(e)[:300]}", flush=True)
+    return rec
+
+
+def _mem_dict(mem):
+    if mem is None:
+        return None
+    out = {}
+    for f in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(mem, f, None)
+        if v is not None:
+            out[f] = int(v)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=list_archs(), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--mesh", choices=("pod", "multipod"), default="pod")
+    ap.add_argument("--strategy", default="baseline")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) cell")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--no-cost", action="store_true",
+                    help="compile + memory proof only (multipod pass: the "
+                         "roofline table is single-pod per EXPERIMENTS.md)")
+    ap.add_argument("--tag", default="",
+                    help="suffix for the output dir (hillclimb variants)")
+    args = ap.parse_args()
+
+    outdir = OUT_ROOT / (args.mesh + (f"-{args.tag}" if args.tag else ""))
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        cells = [(a, s) for a in list_archs() for s in SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    n_ok = n_skip = n_err = 0
+    for arch, shape in cells:
+        path = outdir / f"{arch}__{shape}.json"
+        if args.skip_existing and path.exists():
+            rec = json.loads(path.read_text())
+            if rec.get("status") == "ok":
+                n_ok += 1
+                continue
+        rec = run_cell(arch, shape, args.mesh, args.strategy,
+                       with_cost=not args.no_cost)
+        path.write_text(json.dumps(rec, indent=1))
+        n_ok += rec["status"] == "ok"
+        n_skip += rec["status"] == "skipped"
+        n_err += rec["status"] == "error"
+    print(f"\ndry-run [{args.mesh}]: {n_ok} ok, {n_skip} skipped, "
+          f"{n_err} failed", flush=True)
+    raise SystemExit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

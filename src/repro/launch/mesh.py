@@ -1,0 +1,38 @@
+"""Production meshes (single-pod and multi-pod).
+
+``make_production_mesh`` is a FUNCTION, not a module constant, so importing
+this module never touches jax device state (the dry-run sets the 512-device
+XLA flag before its first jax call; tests run with 8 devices).
+
+Axis semantics (DESIGN.md §5): ``model`` is the mesh X dimension (TP /
+expert columns), ``data`` the Y dimension (DP rows), ``pod`` the off-chip
+link between pods ("the mesh extends over off-chip links", BSG Ten).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_test_mesh", "HW"]
+
+
+class HW:
+    """TPU v5e hardware constants used by the roofline (per chip)."""
+    PEAK_FLOPS_BF16 = 197e12     # FLOP/s
+    HBM_BW = 819e9               # bytes/s
+    ICI_BW = 50e9                # bytes/s per link
+    HBM_BYTES = 16 * 2**30       # capacity
+    VMEM_BYTES = 128 * 2**20
+    DCN_BW = 25e9                # cross-pod (the "off-chip link")
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(shape=(2, 4), axes=("data", "model")):
+    """Small mesh over however many devices the test process has."""
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

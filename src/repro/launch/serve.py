@@ -1,0 +1,181 @@
+"""Serving launcher: continuous-batched decode against a KV cache.
+
+The server loop is the paper's endpoint discipline applied to request
+handling: a bounded slot pool (slots = credits), per-slot sequence state,
+and one batched decode step per tick that services every slot at line
+rate.  Admission is **inline prefill** (Orca-style token-level continuous
+batching): a newly admitted request spends its first ticks feeding prompt
+tokens through the same decode step (outputs discarded), so no slot ever
+stalls another — the "absorb at line rate" rule (paper C2).  Finished
+sequences free their slot (the credit returns on the reverse path).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch stablelm-3b --reduced \
+      --requests 16 --slots 4 --max-new 32
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import List, Optional
+
+import numpy as np
+
+__all__ = ["Request", "Server"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: "np.ndarray"
+    max_new: int
+    out: Optional[List[int]] = None
+    submitted_at: float = 0.0
+    done_at: float = 0.0
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Request
+    fed: int = 0          # prompt tokens already fed
+
+    @property
+    def prefilling(self) -> bool:
+        return self.fed < len(self.req.prompt)
+
+
+class Server:
+    """Continuous-batching decode server over the framework's serve step."""
+
+    def __init__(self, cfg, mesh, slots: int, max_seq: int,
+                 strategy: str = "baseline", eos_id: int = -1):
+        import jax
+        import jax.numpy as jnp
+        from repro.configs.base import ShapeConfig
+        from repro.launch import step as step_mod
+        from repro.models.api import get_model
+
+        self.jax, self.jnp = jax, jnp
+        self.cfg, self.mesh = cfg, mesh
+        self.model = get_model(cfg)
+        self.slots, self.max_seq, self.eos_id = slots, max_seq, eos_id
+        shape = ShapeConfig("serve", max_seq, slots, "decode")
+        self.rules = step_mod.cell_rules(mesh, cfg, shape, strategy)
+        self.serve_step = jax.jit(
+            step_mod.make_serve_step(cfg, self.rules), donate_argnums=(1,))
+        with mesh:
+            self.params = jax.jit(
+                self.model.init_params, static_argnums=0,
+                out_shardings=self.model.param_specs(cfg, self.rules)
+            )(cfg, jax.random.key(0))
+            self.cache = self.model.init_cache(cfg, slots, max_seq)
+        self.active: List[Optional[_Slot]] = [None] * slots
+        self.feed = np.zeros((slots,), np.int32)   # token each slot eats next
+        self.queue: List[Request] = []
+        self.completed: List[Request] = []
+        self.ticks = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        req.submitted_at = time.perf_counter()
+        req.out = []
+        self.queue.append(req)
+
+    def _admit(self):
+        for s in range(self.slots):
+            if self.active[s] is None and self.queue:
+                req = self.queue.pop(0)
+                slot = _Slot(req=req)
+                self.active[s] = slot
+                self.cache = self._reset_slot(self.cache, s)
+                self.feed[s] = int(req.prompt[0])
+                slot.fed = 1
+
+    def _reset_slot(self, cache, s):
+        """Zero slot ``s``'s lane: length always; recurrent state for
+        SSM/hybrid families (stale KV needs no wipe — attention masks by
+        length, and new appends overwrite)."""
+        out = dict(cache)
+        out["len"] = cache["len"].at[s].set(0)
+        if "state" in cache:   # mamba2: (L,B,...) / jamba: (NP,nm,B,...)
+            bdim = 1 if self.cfg.family == "ssm" else 2
+            idx = (slice(None),) * bdim + (s,)
+            out["state"] = cache["state"].at[idx].set(0)
+            out["conv"] = cache["conv"].at[idx].set(0)
+        return out
+
+    # ------------------------------------------------------------------
+    def tick(self):
+        """One decode step for every slot (idle slots eat a pad token)."""
+        self._admit()
+        with self.mesh:
+            nxt, self.cache = self.serve_step(
+                self.params, self.cache, self.jnp.asarray(self.feed))
+        nxt = np.asarray(nxt)
+        self.ticks += 1
+        for s, slot in enumerate(self.active):
+            if slot is None:
+                continue
+            req = slot.req
+            if slot.prefilling:
+                self.feed[s] = int(req.prompt[slot.fed])   # ignore output
+                slot.fed += 1
+                continue
+            tok = int(nxt[s])
+            req.out.append(tok)
+            self.feed[s] = tok
+            if tok == self.eos_id or len(req.out) >= req.max_new:
+                req.done_at = time.perf_counter()
+                self.completed.append(req)
+                self.active[s] = None   # credit returns; slot freed
+
+    def run(self, tick_limit: int = 10_000) -> int:
+        while (self.queue or any(sl is not None for sl in self.active)) \
+                and self.ticks < tick_limit:
+            self.tick()
+        return self.ticks
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--mesh-shape", default="2,4")
+    args = ap.parse_args()
+
+    import jax
+    jax.config.update("jax_num_cpu_devices", args.devices)
+    from repro.configs import get_config, reduced_config
+    from repro.launch.mesh import make_test_mesh
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced_config(cfg)
+    mesh_shape = tuple(int(x) for x in args.mesh_shape.split(","))
+    mesh = make_test_mesh(mesh_shape, ("data", "model"))
+    rng = np.random.default_rng(0)
+    server = Server(cfg, mesh, slots=args.slots, max_seq=args.max_seq)
+    for r in range(args.requests):
+        server.submit(Request(
+            rid=r, prompt=rng.integers(0, cfg.vocab_size,
+                                       size=args.prompt_len).astype(np.int32),
+            max_new=args.max_new))
+    t0 = time.perf_counter()
+    ticks = server.run()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.out) for r in server.completed)
+    lat = [r.done_at - r.submitted_at for r in server.completed]
+    print(f"served {len(server.completed)}/{args.requests} requests, "
+          f"{toks} tokens in {ticks} ticks / {dt:.1f}s "
+          f"({toks/max(dt,1e-9):.1f} tok/s), "
+          f"mean latency {np.mean(lat):.2f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,242 @@
+"""Step builders: one jit-able function + shardings per (arch × shape) cell.
+
+Three step kinds, matching the assigned shapes:
+
+* ``train``   — fwd + bwd + AdamW/ZeRO-1 update (``train_4k``);
+* ``prefill`` — forward, last-token logits only (``prefill_32k``);
+* ``decode``  — one-token ``decode_step`` against a seq_len KV cache
+                (``decode_32k`` / ``long_500k``).
+
+:func:`build_cell` returns everything the dry-run, the trainer and the
+server need: the function, its in/out shardings, donate_argnums, and
+ShapeDtypeStruct stand-ins for every input (no allocation — the shannon/
+kernels pattern).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES
+from repro.models.api import get_model
+from repro.parallel.sharding import Rules, make_rules
+
+__all__ = ["Cell", "cell_rules", "input_specs", "batch_shardings",
+           "build_cell", "cell_applicable", "all_cells"]
+
+
+# ---------------------------------------------------------------------------
+# cell applicability (DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+def cell_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, ("pure full-attention arch: 500k-token KV does not fit "
+                       "any chip; skipped per DESIGN.md §6")
+    return True, ""
+
+
+def all_cells():
+    from repro.configs import list_archs
+    from repro.configs.base import get_config
+    out = []
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            ok, why = cell_applicable(cfg, shape)
+            out.append((cfg, shape, ok, why))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# per-cell rules: adapt the strategy to the cell's divisibility constraints
+# ---------------------------------------------------------------------------
+
+def cell_rules(mesh, cfg: ModelConfig, shape: ShapeConfig,
+               strategy: str = "baseline", **overrides) -> Rules:
+    rules = make_rules(mesh, strategy, **overrides)
+    dp = rules.axis_size(rules.batch)
+    if shape.global_batch % max(dp, 1) != 0:
+        # e.g. long_500k's B=1: no batch sharding; spread the KV slab over
+        # every axis instead ("virtual mesh" uses the whole edge).
+        kv = tuple(a for a in ("data", "model") if rules.has_axis(a))
+        rules = dataclasses.replace(rules, batch=None, zero1=None,
+                                    kv_seq=kv if shape.kind == "decode"
+                                    else rules.kv_seq)
+    if shape.kind != "train":
+        # inference: no remat (nothing to re-materialize)
+        rules = dataclasses.replace(rules, remat="none")
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# input ShapeDtypeStructs + shardings
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the data inputs of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+        }
+        if shape.kind == "train":
+            batch["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+            batch["mask"] = jax.ShapeDtypeStruct((B, S), jnp.float32)
+        if cfg.family == "audio":
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.encdec.encoder_seq, cfg.d_model), jnp.float32)
+        if cfg.family == "vlm":
+            batch["positions"] = jax.ShapeDtypeStruct((3, B, S), i32)
+        return {"batch": batch}
+    # decode: KV cache of seq_len, one new token per sequence
+    model = get_model(cfg)
+    cache = jax.eval_shape(
+        functools.partial(model.init_cache, cfg, B, S))
+    return {"cache": cache, "tokens": jax.ShapeDtypeStruct((B,), i32)}
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeConfig, rules: Rules
+                    ) -> Dict[str, Any]:
+    b = rules.batch
+    out = {"tokens": rules.sharding(b, None)}
+    if shape.kind == "train":
+        out["labels"] = rules.sharding(b, None)
+        out["mask"] = rules.sharding(b, None)
+    if cfg.family == "audio":
+        out["frames"] = rules.sharding(b, None, None)
+    if cfg.family == "vlm":
+        out["positions"] = rules.sharding(None, b, None)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the three step kinds
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, rules: Rules, opt_cfg: optim.OptConfig,
+                    state_shardings: Optional[Dict] = None):
+    model = get_model(cfg)
+
+    def train_step(params, opt_state, batch):
+        def loss(p):
+            return model.loss_fn(p, batch, cfg, rules)
+
+        (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params)
+        params, opt_state, om = optim.apply(
+            opt_cfg, params, grads, opt_state, state_shardings)
+        return params, opt_state, {"loss": l, **metrics, **om}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, rules: Rules):
+    model = get_model(cfg)
+
+    def prefill_step(params, batch):
+        kwargs = {}
+        if cfg.family == "audio":
+            kwargs["frames"] = batch["frames"]
+        logits, _aux = model.forward(params, batch["tokens"], cfg, rules,
+                                     positions=batch.get("positions"),
+                                     last_only=True, **kwargs)
+        return logits[:, 0]            # (B, V): next-token distribution
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, rules: Rules):
+    model = get_model(cfg)
+
+    def serve_step(params, cache, tokens):
+        logits, cache = model.decode_step(params, cache, tokens, cfg, rules)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# the full cell bundle
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Cell:
+    cfg: ModelConfig
+    shape: ShapeConfig
+    rules: Rules
+    fn: Any                      # the step callable
+    args: tuple                  # ShapeDtypeStruct args, in order
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple
+
+    def jitted(self):
+        return jax.jit(self.fn, in_shardings=self.in_shardings,
+                       out_shardings=self.out_shardings,
+                       donate_argnums=self.donate_argnums)
+
+    def lower(self):
+        return self.jitted().lower(*self.args)
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh,
+               strategy: str = "baseline",
+               opt_cfg: Optional[optim.OptConfig] = None,
+               **rule_overrides) -> Cell:
+    rules = cell_rules(mesh, cfg, shape, strategy, **rule_overrides)
+    model = get_model(cfg)
+    p_shapes = model.param_shapes(cfg)
+    p_specs = model.param_specs(cfg, rules)
+    if rules.fsdp and shape.kind == "train":
+        # ZeRO-3: bank params (and thus grads) over the zero1 axis too —
+        # GSPMD all-gathers weights per layer and reduce-scatters grads
+        from repro.optim.adamw import _zero1_spec
+        from jax.sharding import NamedSharding
+        p_specs = {k: NamedSharding(
+            rules.mesh, _zero1_spec(p_specs[k].spec, p_shapes[k].shape,
+                                    rules))
+            for k in p_specs}
+    specs = input_specs(cfg, shape)
+    repl = rules.sharding()
+
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or optim.OptConfig()
+        s_shapes = optim.state_shapes(p_shapes)
+        s_specs = optim.state_specs(p_specs, p_shapes, rules)
+        fn = make_train_step(cfg, rules, opt_cfg, s_specs)
+        b_spec = batch_shardings(cfg, shape, rules)
+        return Cell(cfg, shape, rules, fn,
+                    args=(p_shapes, s_shapes, specs["batch"]),
+                    in_shardings=(p_specs, s_specs, b_spec),
+                    out_shardings=(p_specs, s_specs, repl),  # repl: prefix
+                    donate_argnums=(0, 1))
+
+    if shape.kind == "prefill":
+        fn = make_prefill_step(cfg, rules)
+        b_spec = batch_shardings(cfg, shape, rules)
+        out = rules.sharding(rules.batch, rules.vocab if
+                             cfg.vocab_size % max(
+                                 rules.axis_size(rules.vocab), 1) == 0
+                             else None)
+        return Cell(cfg, shape, rules, fn,
+                    args=(p_shapes, specs["batch"]),
+                    in_shardings=(p_specs, b_spec),
+                    out_shardings=out,
+                    donate_argnums=())
+
+    # decode
+    fn = make_serve_step(cfg, rules)
+    c_specs = model.cache_specs(cfg, rules)
+    tok_spec = rules.sharding(rules.batch)
+    return Cell(cfg, shape, rules, fn,
+                args=(p_shapes, specs["cache"], specs["tokens"]),
+                in_shardings=(p_specs, c_specs, tok_spec),
+                out_shardings=(tok_spec, c_specs),
+                donate_argnums=(1,))

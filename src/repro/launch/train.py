@@ -1,0 +1,75 @@
+"""Training launcher.
+
+On the CPU container this runs REDUCED configs end-to-end (the full configs
+are exercised by the dry-run); on a real pod the same entry point runs the
+full config — only ``--devices``/``--reduced`` change.
+
+  PYTHONPATH=src python -m repro.launch.train --arch mixtral-8x7b \
+      --reduced --steps 50 --devices 8 --mesh-shape 2,4
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale config (CPU container)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--mesh-shape", default="2,4")
+    ap.add_argument("--strategy", default="baseline")
+    ap.add_argument("--ckpt-dir", default="checkpoints/train")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    import jax
+    jax.config.update("jax_num_cpu_devices", args.devices)
+
+    from repro import optim
+    from repro.configs import SHAPES, get_config, reduced_config
+    from repro.configs.base import ShapeConfig
+    from repro.data.pipeline import Prefetcher, batch_iterator
+    from repro.launch.mesh import make_test_mesh
+    from repro.runtime import Trainer, TrainerConfig
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced_config(cfg)
+        shape = ShapeConfig("cli", args.seq_len, args.batch, "train")
+    else:
+        shape = SHAPES[args.shape]
+
+    mesh_shape = tuple(int(x) for x in args.mesh_shape.split(","))
+    mesh = make_test_mesh(mesh_shape, ("data", "model")[-len(mesh_shape):]
+                          if len(mesh_shape) == 2 else ("pod", "data", "model"))
+    opt_cfg = optim.OptConfig(lr_peak=args.lr, warmup_steps=10,
+                              total_steps=args.steps)
+    tcfg = TrainerConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                         ckpt_dir=args.ckpt_dir)
+    trainer = Trainer(cfg, shape, mesh, opt_cfg, tcfg,
+                      strategy=args.strategy)
+    if args.resume:
+        trainer.resume_or_init()
+    else:
+        trainer.init()
+    data = Prefetcher(batch_iterator(cfg, shape, start_step=trainer.step))
+    try:
+        final = trainer.run(iter(data))
+        print("final metrics:", final)
+        for ev in trainer.events:
+            print("event:", ev)
+    finally:
+        data.close()
+        trainer.close()
+
+
+if __name__ == "__main__":
+    main()

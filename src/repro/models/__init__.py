@@ -1,0 +1,2 @@
+"""Model substrate: layers, attention, and the assigned architectures."""
+from .api import get_model  # noqa: F401

@@ -1,0 +1,24 @@
+"""Uniform model API: family dispatch for the 10 assigned architectures."""
+from __future__ import annotations
+
+import dataclasses
+from types import ModuleType
+
+from repro.configs.base import ModelConfig
+from . import jamba, mamba2, transformer, whisper
+
+_FAMILY_MODULE = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "hybrid": jamba,
+    "ssm": mamba2,
+    "audio": whisper,
+}
+
+
+def get_model(cfg: ModelConfig) -> ModuleType:
+    """The module implementing this config's family.  Every module exposes:
+    ``init_params, param_shapes, param_specs, forward, loss_fn, init_cache,
+    cache_specs, decode_step``."""
+    return _FAMILY_MODULE[cfg.family]

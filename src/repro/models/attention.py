@@ -1,0 +1,245 @@
+"""Attention: reference, memory-efficient chunked, and distributed decode.
+
+Three implementations, selected by ``Rules.attn_impl``:
+
+* ``ref``     — materialized (S, S) scores; the small-shape oracle.
+* ``chunked`` — online-softmax over KV blocks (lax.scan), O(S·chunk) memory;
+                the structural twin of the Pallas kernel and the default for
+                32k prefill / 4k train graphs.
+* ``flash``   — the Pallas TPU kernel (kernels/flash_attention.py);
+                interpret-mode on CPU.
+
+Decode uses :func:`decode_attention` — the paper-C7 "virtual mesh" layout:
+the KV cache is sequence-sharded across the ``model`` axis (each chip owns a
+contiguous slab of the context, like a bank of the distributed DRAM), every
+chip computes partial attention for ALL heads over its slab, and the partials
+are combined with a numerically exact log-sum-exp ``psum`` on the reverse
+path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax, shard_map
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["repeat_kv", "attention", "reference_attention",
+           "chunked_attention", "decode_attention"]
+
+_NEG_INF = -1e30
+
+
+def repeat_kv(k: jax.Array, n: int) -> jax.Array:
+    """(B, S, K, hd) -> (B, S, K*n, hd): GQA KV-head replication for TP>K."""
+    if n == 1:
+        return k
+    b, s, kh, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kh, n, hd)) \
+              .reshape(b, s, kh * n, hd)
+
+
+def _mask_bias(q_pos: jax.Array, k_pos: jax.Array, causal: bool,
+               window: Optional[int]) -> jax.Array:
+    """(…, Sq, Sk) additive bias from causal + sliding-window masking."""
+    ok = jnp.ones(q_pos.shape[:-1] + (q_pos.shape[-1], k_pos.shape[-1]), bool)
+    if causal:
+        ok &= k_pos[..., None, :] <= q_pos[..., :, None]
+    if window is not None:
+        ok &= k_pos[..., None, :] > q_pos[..., :, None] - window
+    return jnp.where(ok, 0.0, _NEG_INF)
+
+
+def reference_attention(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        q_positions=None, k_positions=None) -> jax.Array:
+    """Oracle: full softmax over materialized scores. q:(B,Sq,H,hd),
+    k/v:(B,Sk,K,hd) with K | H (GQA handled natively — KV never repeated)."""
+    b, sq, h, hd = q.shape
+    sk, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    qg = q.reshape(b, sq, kh, g, hd)
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(jnp.arange(sq), (b, sq))
+    if k_positions is None:
+        k_positions = jnp.broadcast_to(jnp.arange(sk), (b, sk))
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32)
+    scores = scores * (hd ** -0.5)
+    scores = scores + _mask_bias(q_positions, k_positions, causal,
+                                 window)[:, None, None]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(q.dtype), v)
+    return out.reshape(b, sq, h, hd)
+
+
+def chunked_attention(q, k, v, *, causal: bool = True,
+                      window: Optional[int] = None, chunk: int = 1024,
+                      q_positions=None, k_positions=None,
+                      unroll: bool = False) -> jax.Array:
+    """Online-softmax attention, scanning KV in blocks of ``chunk``.
+
+    Peak memory O(B·H·Sq·chunk) instead of O(B·H·Sq·Sk).  Matches
+    reference_attention to fp32 accumulation error.  GQA is handled
+    natively: k/v stay at K heads (K | H), queries grouped g = H/K — the
+    repeated-KV tensor (and its cross-shard reshard) never materializes.
+    """
+    b, sq, h, hd = q.shape
+    sk, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    chunk = min(chunk, sk)
+    nblk = (sk + chunk - 1) // chunk
+    pad = nblk * chunk - sk
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(jnp.arange(sq), (b, sq))
+    if k_positions is None:
+        k_positions = jnp.broadcast_to(jnp.arange(sk), (b, sk))
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_positions = jnp.pad(k_positions, ((0, 0), (0, pad)),
+                              constant_values=jnp.iinfo(jnp.int32).max // 2)
+    kb = k.reshape(b, nblk, chunk, kh, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nblk, chunk, kh, hd).transpose(1, 0, 2, 3, 4)
+    pb = k_positions.reshape(b, nblk, chunk).transpose(1, 0, 2)
+
+    qf = q.astype(jnp.float32).reshape(b, sq, kh, g, hd) * (hd ** -0.5)
+
+    def body(carry, blk):
+        acc, m, den = carry          # (B,Sq,H,hd), (B,H,Sq), (B,H,Sq)
+        kc, vc, pc = blk
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qf, kc.astype(jnp.float32))
+        s = s.reshape(b, h, sq, chunk)
+        s = s + _mask_bias(q_positions, pc, causal, window)[:, None]
+        m_new = jnp.maximum(m, s.max(-1))
+        scale = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        den = den * scale + p.sum(-1)
+        pv = jnp.einsum("bkgqs,bskd->bqkgd",
+                        p.reshape(b, kh, g, sq, chunk),
+                        vc.astype(jnp.float32)).reshape(b, sq, h, hd)
+        acc = acc * scale.transpose(0, 2, 1)[..., None] + pv
+        return (acc, m_new, den), None
+
+    acc0 = jnp.zeros((b, sq, h, hd), jnp.float32)
+    m0 = jnp.full((b, h, sq), _NEG_INF, jnp.float32)
+    den0 = jnp.zeros((b, h, sq), jnp.float32)
+    # inside a shard_map island the carries must match the body's
+    # varying-manual-axes type
+    vma = tuple(getattr(jax.typeof(q), "vma", ()) or ())
+    if vma:
+        acc0, m0, den0 = (lax.pcast(t, vma, to="varying")
+                          for t in (acc0, m0, den0))
+    (acc, m, den), _ = lax.scan(body, (acc0, m0, den0), (kb, vb, pb),
+                                unroll=unroll)
+    den = jnp.maximum(den, 1e-30)
+    out = acc / den.transpose(0, 2, 1)[..., None]
+    return out.astype(q.dtype)
+
+
+def attention(q, k, v, *, impl: str = "chunked", causal: bool = True,
+              window: Optional[int] = None, chunk: int = 1024,
+              q_positions=None, k_positions=None,
+              unroll: bool = False) -> jax.Array:
+    if impl == "ref":
+        return reference_attention(q, k, v, causal=causal, window=window,
+                                   q_positions=q_positions,
+                                   k_positions=k_positions)
+    if impl == "chunked":
+        return chunked_attention(q, k, v, causal=causal, window=window,
+                                 chunk=chunk, q_positions=q_positions,
+                                 k_positions=k_positions, unroll=unroll)
+    if impl == "flash":
+        from repro.kernels import flash_attention_op
+        return flash_attention_op(q, k, v, causal=causal, window=window)
+    if impl == "noattn":
+        # cost-isolation stub (launch/costing.py): same shapes/dtypes, no
+        # score computation — used to measure the attention core's share of
+        # HLO traffic, which the Pallas flash kernel keeps in VMEM on TPU.
+        return q
+    raise ValueError(f"unknown attention impl {impl!r}")
+
+
+# ---------------------------------------------------------------------------
+# Distributed decode: sequence-sharded KV cache ("virtual mesh", paper C7).
+# ---------------------------------------------------------------------------
+
+def decode_attention(rules, q, k_cache, v_cache, cache_len,
+                     window: Optional[int] = None) -> jax.Array:
+    """One-token attention against a sequence-sharded KV cache.
+
+    q:        (B, H, hd)        — replicated over the model axis
+    k_cache:  (B, S, K, hd)     — sharded over ``rules.kv_seq`` on dim 1
+    v_cache:  (B, S, K, hd)
+    cache_len:(B,) int32        — valid prefix length (global positions)
+
+    Every model shard holds all KV *heads* for a slab of the sequence;
+    partial softmax statistics combine via psum — the reverse-network
+    "response" of the remote-load gather.
+    """
+    kv_axis = rules.kv_seq if not hasattr(rules, "_clean") else \
+        rules._clean(rules.kv_seq)
+    if kv_axis is None:
+        # single-shard fallback: plain local decode
+        return _local_decode(q, k_cache, v_cache, cache_len, 0, window)[0]
+    kv_axes = (kv_axis,) if isinstance(kv_axis, str) else tuple(kv_axis)
+
+    batch_spec = rules._clean(rules.batch)
+
+    def island(q_l, k_l, v_l, len_l):
+        # linear shard index over the (possibly multi-axis) kv_seq group
+        idx = jnp.zeros((), jnp.int32)
+        for a in kv_axes:
+            idx = idx * lax.axis_size(a) + lax.axis_index(a)
+        s_local = k_l.shape[1]
+        out, num_den = _local_decode(q_l, k_l, v_l, len_l,
+                                     idx * s_local, window)
+        num, m, den = num_den
+        m_all = lax.pmax(m, kv_axes)
+        corr = jnp.exp(m - m_all)
+        num = lax.psum(num * corr[..., None], kv_axes)
+        den = lax.psum(den * corr, kv_axes)
+        return (num / jnp.maximum(den, 1e-30)[..., None]).astype(q_l.dtype)
+
+    names = set(kv_axes) | ({batch_spec} if isinstance(batch_spec, str)
+                            else set(batch_spec or ()))
+    sm = shard_map(
+        island, mesh=rules.mesh,
+        in_specs=(P(batch_spec, None, None),
+                  P(batch_spec, kv_axis, None, None),
+                  P(batch_spec, kv_axis, None, None),
+                  P(batch_spec)),
+        out_specs=P(batch_spec, None, None),
+        axis_names=names)
+    return sm(q, k_cache, v_cache, cache_len)
+
+
+def _local_decode(q, k, v, cache_len, pos_offset, window):
+    """Partial decode attention over a local KV slab.
+
+    q: (B, H, hd); k/v: (B, S_local, K, hd); returns (out, (num, m, den))
+    with fp32 partial statistics for cross-shard combination.
+    """
+    b, h, hd = q.shape
+    s_local, kh = k.shape[1], k.shape[2]
+    g = h // kh                                   # q heads per kv head
+    qf = q.astype(jnp.float32).reshape(b, kh, g, hd) * (hd ** -0.5)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qf, kf)     # (B, K, g, S_local)
+    pos = pos_offset + jnp.arange(s_local)
+    ok = pos[None, :] < cache_len[:, None]        # only the valid prefix
+    if window is not None:
+        ok &= pos[None, :] > (cache_len[:, None] - 1 - window)
+    s = jnp.where(ok[:, None, None, :], s, _NEG_INF)
+    m = s.max(-1)                                 # (B, K, g)
+    p = jnp.exp(s - m[..., None])
+    # guard all-masked shards: exp(-inf - -inf) -> make contribution zero
+    p = jnp.where(ok[:, None, None, :], p, 0.0)
+    den = p.sum(-1)
+    num = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    num = num.reshape(b, h, hd)
+    m = m.reshape(b, h)
+    den = den.reshape(b, h)
+    out = (num / jnp.maximum(den, 1e-30)[..., None]).astype(q.dtype)
+    return out, (num, m, den)

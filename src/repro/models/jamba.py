@@ -1,0 +1,288 @@
+"""Jamba: hybrid Mamba + attention (1:7) with interleaved MoE.
+
+Layer pattern per period of ``attn_period`` (=8) layers:
+mixer  = [mamba x 7, attention]  (attention closes each period)
+mlp    = [dense, MoE, dense, MoE, ...]  (MoE every ``moe.every_n_layers``=2)
+
+Params are stacked over *periods* and scanned, with the period body unrolled
+(heterogeneous layers can't share one scan body) — the HLO contains one
+period, not 32 layers.
+
+This is the showcase arch for the paper's heterogeneity story (C7): mamba
+mixers are "sub-nodes" (small, many per tile), the MoE is a "sub-mesh"
+(experts spread over the model axis), attention KV at decode is the
+"virtual mesh" sequence-sharded cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.parallel.sharding import Rules
+from . import mamba2, moe as moe_mod, transformer as tfm
+from .attention import attention, decode_attention, repeat_kv
+from .layers import (cross_entropy, embed_lookup, init_dense, init_norm,
+                     rms_norm, rope, swiglu)
+
+__all__ = ["param_table", "init_params", "param_shapes", "param_specs",
+           "forward", "loss_fn", "init_cache", "cache_specs", "decode_step"]
+
+AUX_COEF = 0.01
+
+
+def _layout(cfg: ModelConfig):
+    P = cfg.attn_period
+    NP = cfg.num_layers // P
+    n_moe = sum(1 for i in range(P)
+                if (i % cfg.moe.every_n_layers) == cfg.moe.every_n_layers - 1)
+    return P, NP, P - 1, n_moe, P - n_moe
+
+
+def param_table(cfg: ModelConfig) -> Dict[str, Tuple[tuple, tuple]]:
+    D, hd = cfg.d_model, cfg.head_dim
+    H, K, F = cfg.num_heads, cfg.num_kv_heads, cfg.d_ff
+    P, NP, n_mamba, n_moe, n_dense = _layout(cfg)
+    E, Fe = cfg.moe.num_experts, cfg.moe.d_ff_expert
+    t = {
+        "embed": ((cfg.vocab_size, D), ("vocab", None)),
+        "final_norm": ((D,), (None,)),
+        "lm_head": ((D, cfg.vocab_size), (None, "vocab")),
+    }
+    # attention: one per period
+    t["periods/attn_norm"] = ((NP, D), (None, None))
+    t["periods/wq"] = ((NP, D, H * hd), (None, None, "heads"))
+    t["periods/wk"] = ((NP, D, K * hd), (None, None, "kv_heads"))
+    t["periods/wv"] = ((NP, D, K * hd), (None, None, "kv_heads"))
+    t["periods/wo"] = ((NP, H * hd, D), (None, "heads", None))
+    # mamba mixers: (NP, n_mamba, ...)
+    for k, (shape, axes) in mamba2.mixer_table(cfg, n_mamba).items():
+        t[f"periods/mamba_{k}"] = ((NP,) + shape, (None,) + axes)
+    # dense MLPs
+    t["periods/mlp_norm"] = ((NP, n_dense, D), (None, None, None))
+    t["periods/w_gate"] = ((NP, n_dense, D, F), (None, None, None, "ff"))
+    t["periods/w_up"] = ((NP, n_dense, D, F), (None, None, None, "ff"))
+    t["periods/w_down"] = ((NP, n_dense, F, D), (None, None, "ff", None))
+    # MoE MLPs
+    t["periods/moe_norm"] = ((NP, n_moe, D), (None, None, None))
+    t["periods/router"] = ((NP, n_moe, D, E), (None, None, None, None))
+    t["periods/moe_gate"] = ((NP, n_moe, E, D, Fe), (None, None, "experts", None, "ff_expert"))
+    t["periods/moe_up"] = ((NP, n_moe, E, D, Fe), (None, None, "experts", None, "ff_expert"))
+    t["periods/moe_down"] = ((NP, n_moe, E, Fe, D), (None, None, "experts", "ff_expert", None))
+    return t
+
+
+def param_shapes(cfg):
+    return {k: jax.ShapeDtypeStruct(
+        s, jnp.float32 if k.endswith(("A_log", "dt_bias", "router")) else cfg.param_dtype)
+        for k, (s, _a) in param_table(cfg).items()}
+
+
+def param_specs(cfg, rules: Rules):
+    out = {}
+    for k, (s, axes) in param_table(cfg).items():
+        resolved = [tfm._resolve_axis(cfg, rules, a, s[i]) if a in
+                    ("vocab", "heads", "kv_heads", "ff", "experts", "ff_expert")
+                    else None for i, a in enumerate(axes)]
+        out[k] = rules.sharding(*resolved)
+    return out
+
+
+def init_params(cfg: ModelConfig, key):
+    table = param_table(cfg)
+    keys = jax.random.split(key, len(table))
+    out = {}
+    for (name, (shape, _a)), k in zip(sorted(table.items()), keys):
+        if "norm" in name:
+            out[name] = init_norm(shape, cfg.param_dtype)
+        elif name.endswith("A_log"):
+            nh = shape[-1]
+            out[name] = jnp.broadcast_to(
+                jnp.log(jnp.linspace(1.0, 16.0, nh)), shape).astype(jnp.float32)
+        elif name.endswith("D_skip"):
+            out[name] = jnp.ones(shape, cfg.param_dtype)
+        elif name.endswith(("dt_bias",)):
+            out[name] = jnp.zeros(shape, jnp.float32)
+        elif name.endswith("conv_b"):
+            out[name] = jnp.zeros(shape, cfg.param_dtype)
+        elif name.endswith("router"):
+            out[name] = init_dense(k, shape, jnp.float32)
+        else:
+            out[name] = init_dense(k, shape, cfg.param_dtype)
+    return out
+
+
+def _split(params):
+    glob = {k: v for k, v in params.items() if not k.startswith("periods/")}
+    per = {k.split("/", 1)[1]: v for k, v in params.items()
+           if k.startswith("periods/")}
+    return glob, per
+
+
+def _is_moe_layer(cfg, i):
+    n = cfg.moe.every_n_layers
+    return (i % n) == n - 1
+
+
+def _mlp(x, pp, cfg, rules, i, counters):
+    di, mi = counters  # running indices into dense / moe stacks
+    if _is_moe_layer(cfg, i):
+        lp = {"router": pp["router"][mi], "w_gate": pp["moe_gate"][mi],
+              "w_up": pp["moe_up"][mi], "w_down": pp["moe_down"][mi]}
+        h = rms_norm(x, pp["moe_norm"][mi], cfg.norm_eps)
+        out, aux = moe_mod.moe_block(h, lp, cfg, rules)
+        return x + out, aux, (di, mi + 1)
+    h = rms_norm(x, pp["mlp_norm"][di], cfg.norm_eps)
+    out = swiglu(h, pp["w_gate"][di], pp["w_up"][di], pp["w_down"][di], rules)
+    return x + out, jnp.zeros((), jnp.float32), (di + 1, mi)
+
+
+def _period_body(x, pp, positions, cfg: ModelConfig, rules: Optional[Rules]):
+    P = cfg.attn_period
+    aux_tot = jnp.zeros((), jnp.float32)
+    counters = (0, 0)
+    for i in range(P):
+        if i == P - 1:  # attention layer
+            lp = {"attn_norm": pp["attn_norm"], "wq": pp["wq"],
+                  "wk": pp["wk"], "wv": pp["wv"], "wo": pp["wo"]}
+            x = tfm._attn_block(x, lp, cfg, rules, positions)
+        else:           # mamba mixer
+            lp = {k[len("mamba_"):]: v[i] for k, v in pp.items()
+                  if k.startswith("mamba_")}
+            h = rms_norm(x, lp["norm"], cfg.norm_eps)
+            x = x + mamba2.mixer_apply(lp, h, cfg, rules)
+        x, aux, counters = _mlp(x, pp, cfg, rules, i, counters)
+        aux_tot = aux_tot + aux
+    return x, aux_tot
+
+
+def forward(params, tokens, cfg: ModelConfig, rules: Optional[Rules] = None,
+            positions=None, embeds=None, last_only: bool = False):
+    glob, per = _split(params)
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = embeds if embeds is not None else embed_lookup(glob["embed"], tokens, rules)
+    x = x.astype(cfg.param_dtype)
+    if rules is not None:
+        x = rules.act_btd(x)
+
+    body = functools.partial(_period_body, cfg=cfg, rules=rules)
+    if rules is not None and rules.remat == "full":
+        body = jax.checkpoint(body)
+    elif rules is not None and rules.remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+    def scan_fn(carry, pp):
+        y, aux = body(carry, pp, positions)
+        return y, aux
+
+    x, auxs = lax.scan(scan_fn, x, per,
+                       unroll=(rules.scan_unroll if rules else False))
+    if last_only:
+        x = x[:, -1:]
+    x = rms_norm(x, glob["final_norm"], cfg.norm_eps)
+    logits = x @ glob["lm_head"]
+    if rules is not None:
+        logits = rules.cs(logits, rules.batch, None, rules.vocab) \
+            if last_only else rules.logits(logits)
+    return logits, auxs.sum()
+
+
+def loss_fn(params, batch, cfg, rules=None):
+    logits, aux = forward(params, batch["tokens"], cfg, rules)
+    ce = cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return ce + AUX_COEF * aux, {"ce": ce, "moe_aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               filled: Optional[int] = None):
+    P, NP, n_mamba, _nm, _nd = _layout(cfg)
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    s, di, nh, conv_dim, _ = mamba2._dims(cfg)
+    filled = filled or 0
+    return {
+        "k": jnp.zeros((NP, batch, max_seq, K, hd), cfg.param_dtype),
+        "v": jnp.zeros((NP, batch, max_seq, K, hd), cfg.param_dtype),
+        "state": jnp.zeros((NP, n_mamba, batch, nh, s.state_dim, s.head_dim),
+                           jnp.float32),
+        "conv": jnp.zeros((NP, n_mamba, batch, s.conv_width - 1, conv_dim),
+                          cfg.param_dtype),
+        "len": jnp.full((batch,), filled, jnp.int32),
+    }
+
+
+def cache_specs(cfg: ModelConfig, rules: Rules):
+    kv = rules.sharding(None, rules.batch, rules.kv_seq, None, None)
+    return {"k": kv, "v": kv,
+            "state": rules.sharding(None, None, rules.batch, rules.heads, None, None),
+            "conv": rules.sharding(None, None, rules.batch, None, rules.heads),
+            "len": rules.sharding(rules.batch)}
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig,
+                rules: Optional[Rules] = None, positions=None):
+    glob, per = _split(params)
+    B = tokens.shape[0]
+    P = cfg.attn_period
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    cur_len = cache["len"]
+    pos = cur_len.astype(jnp.int32)
+    x = embed_lookup(glob["embed"], tokens[:, None], rules)[:, 0]
+    x = x.astype(cfg.param_dtype)
+    S_cache = cache["k"].shape[2]
+    slot = (cur_len % S_cache).astype(jnp.int32)
+    moe_rules = tfm._decode_rules(rules)
+
+    def period(carry, xs):
+        x = carry
+        pp, k_c, v_c, st, ct = xs
+        aux_counters = (0, 0)
+        sts, cts = [], []
+        for i in range(P):
+            if i == P - 1:
+                h = rms_norm(x, pp["attn_norm"], cfg.norm_eps)
+                q = (h @ pp["wq"]).reshape(B, H, hd)
+                k_new = (h @ pp["wk"]).reshape(B, K, hd)
+                v_new = (h @ pp["wv"]).reshape(B, K, hd)
+                q = rope(q[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+                k_new = rope(k_new[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+                k_c = tfm._scatter_kv(k_c, k_new[:, None], slot)
+                v_c = tfm._scatter_kv(v_c, v_new[:, None], slot)
+                if rules is not None:
+                    q = rules.cs(q, rules.batch, None, None)
+                att = decode_attention(
+                    rules if rules is not None else tfm._NORULES,
+                    q, k_c, v_c, cur_len + 1, window=None)
+                x = x + att.reshape(B, H * hd) @ pp["wo"]
+            else:
+                lp = {k[len("mamba_"):]: v[i] for k, v in pp.items()
+                      if k.startswith("mamba_")}
+                h = rms_norm(x, lp["norm"], cfg.norm_eps)
+                out, st_i, ct_i = mamba2.mixer_decode(lp, h, st[i], ct[i], cfg)
+                x = x + out
+                sts.append(st_i)
+                cts.append(ct_i)
+            x2 = x[:, None]
+            x2, _aux, aux_counters = _mlp(x2, pp, cfg, moe_rules, i, aux_counters)
+            x = x2[:, 0]
+        return x, (k_c, v_c, jnp.stack(sts), jnp.stack(cts))
+
+    x, (k_all, v_all, st_all, ct_all) = lax.scan(
+        period, x, (per, cache["k"], cache["v"], cache["state"], cache["conv"]),
+        unroll=(rules.scan_unroll if rules else False))
+    x = rms_norm(x, glob["final_norm"], cfg.norm_eps)
+    logits = x @ glob["lm_head"]
+    if rules is not None:
+        logits = rules.cs(logits, rules.batch, rules.vocab)
+    return logits, {"k": k_all, "v": v_all, "state": st_all, "conv": ct_all,
+                    "len": cur_len + 1}

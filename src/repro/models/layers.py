@@ -1,0 +1,115 @@
+"""Shared model layers: norms, RoPE/M-RoPE, embeddings, MLPs.
+
+Everything is functional: params are plain dict pytrees, and each layer is a
+pure function ``f(params, x, ...)``.  Sharding is applied by the caller via
+:class:`repro.parallel.sharding.Rules`.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rms_norm", "rope", "mrope", "swiglu", "init_dense",
+           "init_norm", "embed_lookup", "cross_entropy"]
+
+
+def init_dense(key, shape, dtype, scale: Optional[float] = None):
+    """Truncated-normal fan-in init (matches common LM pretraining setups)."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    s = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -2, 2, shape, jnp.float32)
+            * s).astype(dtype)
+
+
+def init_norm(shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm in fp32 accumulation regardless of activation dtype."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _rope_angles(positions: jax.Array, head_dim: int, theta: float):
+    """positions (..., S) -> cos/sin (..., S, head_dim/2), fp32."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 1e4) -> jax.Array:
+    """Rotary embedding. x: (B, S, H, hd); positions: (B, S)."""
+    hd = x.shape[-1]
+    cos, sin = _rope_angles(positions, hd, theta)     # (B, S, hd/2)
+    cos, sin = cos[..., None, :], sin[..., None, :]   # broadcast over heads
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def mrope(x: jax.Array, positions: jax.Array,
+          sections: Tuple[int, int, int], theta: float = 1e6) -> jax.Array:
+    """Multi-dimensional RoPE (qwen2-vl): ``positions`` is (3, B, S) — the
+    temporal/height/width position streams; ``sections`` partitions the
+    head_dim/2 frequency bands among them."""
+    hd = x.shape[-1]
+    half = hd // 2
+    assert sum(sections) == half, (sections, half)
+    cos_parts, sin_parts = [], []
+    start = 0
+    for i, sec in enumerate(sections):
+        freqs = theta ** (-jnp.arange(start, start + sec, dtype=jnp.float32) / half)
+        ang = positions[i].astype(jnp.float32)[..., None] * freqs  # (B,S,sec)
+        cos_parts.append(jnp.cos(ang))
+        sin_parts.append(jnp.sin(ang))
+        start += sec
+    cos = jnp.concatenate(cos_parts, -1)[..., None, :]
+    sin = jnp.concatenate(sin_parts, -1)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array, rules=None) -> jax.Array:
+    """SwiGLU MLP with column-parallel in / row-parallel out (Megatron)."""
+    g = x @ w_gate
+    u = x @ w_up
+    if rules is not None:
+        g, u = rules.act_btf(g), rules.act_btf(u)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    out = h @ w_down
+    if rules is not None:
+        out = rules.act_btd(out)
+    return out
+
+
+def embed_lookup(table: jax.Array, tokens: jax.Array, rules=None) -> jax.Array:
+    """Vocab-sharded embedding ("virtual mesh" table on the mesh edge).
+
+    With the table sharded over vocab, GSPMD lowers the gather to a
+    one-hot-mask + psum over the vocab axis — the remote-load gather of C1.
+    """
+    out = jnp.take(table, tokens, axis=0)
+    if rules is not None:
+        out = rules.act_btd(out)
+    return out
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Token-mean cross entropy in fp32 (stable log-softmax)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()

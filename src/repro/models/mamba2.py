@@ -1,0 +1,347 @@
+"""Mamba-2 (SSD — state-space duality) blocks and the attention-free LM.
+
+The chunked SSD algorithm is implemented twice, deliberately:
+
+* :func:`ssd_chunked` — pure jnp (differentiable, XLA-fused); used inside
+  train/prefill graphs.  The inter-chunk recurrence is a ``lax.scan`` over
+  S/chunk steps, everything intra-chunk is batched matmuls.
+* ``repro.kernels.ssd_scan_op`` — the Pallas TPU kernel (same math, VMEM
+  state carried across the sequential chunk grid); used for serving
+  benchmarks and validated against the same oracle.
+
+Decode carries (state (N,P) per head + conv tail) — O(1) per token, which
+is what makes the 500k-token shape runnable (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.parallel.sharding import Rules
+from .layers import cross_entropy, embed_lookup, init_dense, init_norm, rms_norm
+
+__all__ = ["param_table", "init_params", "param_shapes", "param_specs",
+           "forward", "loss_fn", "init_cache", "cache_specs", "decode_step",
+           "ssd_chunked"]
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD in pure jnp
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x, dt, B, C, A, chunk: int = 256):
+    """x: (b, S, H, P); dt: (b, S, H); B/C: (b, S, G, N); A: (H,) -> y like x.
+
+    Matches the naive recurrence (kernels/ref.py) to fp32 tolerance.
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    hg = h // g
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))       # dt=0 pad is exact
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = (s + pad) // chunk
+    q = chunk
+
+    xf = x.astype(jnp.float32).reshape(b, nc, q, h, p)
+    dtf = dt.astype(jnp.float32).reshape(b, nc, q, h)
+    Bf = jnp.repeat(B.astype(jnp.float32), hg, axis=2).reshape(b, nc, q, h, n)
+    Cf = jnp.repeat(C.astype(jnp.float32), hg, axis=2).reshape(b, nc, q, h, n)
+    Af = A.astype(jnp.float32)
+
+    dA = dtf * Af                                   # (b, nc, q, h)
+    cum = jnp.cumsum(dA, axis=2)                    # inclusive within chunk
+    # li[b,c,i,j,h] = cum_i - cum_j  (broadcast: i on axis 2, j on axis 3)
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]
+    tri = jnp.tril(jnp.ones((q, q), bool))[None, None, :, :, None]
+    # mask BEFORE exp: the masked upper triangle has positive exponents that
+    # overflow, and grad-of-where would turn that inf into NaN.
+    L = jnp.exp(jnp.where(tri, li, -1e30))
+
+    xdt = xf * dtf[..., None]                       # (b, nc, q, h, p)
+    cb = jnp.einsum("bcqhn,bckhn->bcqkh", Cf, Bf)   # (b,nc,q,q,h)
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", cb * L, xdt)
+
+    total = cum[:, :, -1]                           # (b, nc, h)
+    decay_out = jnp.exp(total[:, :, None] - cum)    # (b, nc, q, h)
+    states = jnp.einsum("bcqhn,bcqhp->bchnp", Bf * decay_out[..., None], xdt)
+
+    def scan_fn(state, inp):
+        st_c, tot_c = inp                           # (b,h,n,p), (b,h)
+        new = jnp.exp(tot_c)[..., None, None] * state + st_c
+        return new, state                           # emit state ENTERING chunk
+
+    st0 = jnp.zeros((b, h, n, p), jnp.float32)
+    _, state_in = lax.scan(scan_fn, st0,
+                           (states.transpose(1, 0, 2, 3, 4),
+                            total.transpose(1, 0, 2)))
+    state_in = state_in.transpose(1, 0, 2, 3, 4)    # (b, nc, h, n, p)
+
+    y_inter = jnp.einsum("bcqhn,bchnp->bcqhp",
+                         Cf * jnp.exp(cum)[..., None], state_in)
+    y = (y_intra + y_inter).reshape(b, nc * q, h, p)[:, :s]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# the Mamba-2 mixer block
+# ---------------------------------------------------------------------------
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    nh = s.num_heads(cfg.d_model)
+    conv_dim = di + 2 * s.num_groups * s.state_dim
+    proj_out = 2 * di + 2 * s.num_groups * s.state_dim + nh
+    return s, di, nh, conv_dim, proj_out
+
+
+def mixer_table(cfg: ModelConfig, L: int) -> Dict[str, Tuple[tuple, tuple]]:
+    s, di, nh, conv_dim, proj_out = _dims(cfg)
+    D = cfg.d_model
+    return {
+        "norm": ((L, D), (None, None)),
+        "in_proj": ((L, D, proj_out), (None, None, "heads")),
+        "conv_w": ((L, s.conv_width, conv_dim), (None, None, "heads")),
+        "conv_b": ((L, conv_dim), (None, "heads")),
+        "A_log": ((L, nh), (None, "heads")),
+        "D_skip": ((L, nh), (None, "heads")),
+        "dt_bias": ((L, nh), (None, "heads")),
+        "gate_norm": ((L, di), (None, "heads")),
+        "out_proj": ((L, di, D), (None, "heads", None)),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv.  x: (B, S, Cd); w: (W, Cd); b: (Cd,)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    return out + b
+
+
+def mixer_apply(lp: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig,
+                rules: Optional[Rules]) -> jax.Array:
+    """One Mamba-2 mixer (pre-norm + residual handled by caller)."""
+    s, di, nh, conv_dim, _ = _dims(cfg)
+    Bsz, S, D = x.shape
+    G, N, P = s.num_groups, s.state_dim, s.head_dim
+
+    zxbcdt = x @ lp["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [di, di + conv_dim], axis=-1)
+    xbc = jax.nn.silu(_causal_conv(xbc, lp["conv_w"], lp["conv_b"])
+                      .astype(jnp.float32)).astype(x.dtype)
+    xs, Bmat, Cmat = jnp.split(xbc, [di, di + G * N], axis=-1)
+    xs = xs.reshape(Bsz, S, nh, P)
+    Bmat = Bmat.reshape(Bsz, S, G, N)
+    Cmat = Cmat.reshape(Bsz, S, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+    if rules is not None:
+        # inside the mixer, head (TP) sharding wins over SP on the same axis
+        seq = None if rules.overlaps(rules.seq, rules.heads) else rules.seq
+        xs = rules.cs(xs, rules.batch, seq, rules.heads, None)
+    ssd_impl = rules.ssd_impl if rules is not None else "chunked"
+    if ssd_impl == "skip":      # cost-isolation stub (launch/costing.py)
+        y = xs
+    elif ssd_impl == "kernel":
+        from repro.kernels import ssd_scan_op
+        y = ssd_scan_op(xs, dt.astype(x.dtype), Bmat, Cmat, A, chunk=s.chunk)
+    else:
+        y = ssd_chunked(xs, dt.astype(x.dtype), Bmat, Cmat, A, chunk=s.chunk)
+    y = y + xs * lp["D_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(Bsz, S, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 lp["gate_norm"], cfg.norm_eps)
+    out = y @ lp["out_proj"]
+    if rules is not None:
+        out = rules.act_btd(out)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# single-token recurrence (decode)
+# ---------------------------------------------------------------------------
+
+def mixer_decode(lp, x, state, conv_tail, cfg: ModelConfig):
+    """x: (B, D); state: (B, H, N, P); conv_tail: (B, W-1, conv_dim)."""
+    s, di, nh, conv_dim, _ = _dims(cfg)
+    Bsz = x.shape[0]
+    G, N, P = s.num_groups, s.state_dim, s.head_dim
+
+    zxbcdt = x @ lp["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [di, di + conv_dim], axis=-1)
+    window = jnp.concatenate([conv_tail, xbc[:, None]], axis=1)  # (B,W,Cd)
+    conv_out = (window * lp["conv_w"][None]).sum(1) + lp["conv_b"]
+    xbc = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    new_tail = window[:, 1:]
+    xs, Bmat, Cmat = jnp.split(xbc, [di, di + G * N], axis=-1)
+    xs = xs.reshape(Bsz, nh, P)
+    Bmat = jnp.repeat(Bmat.reshape(Bsz, G, N), nh // G, axis=1)
+    Cmat = jnp.repeat(Cmat.reshape(Bsz, G, N), nh // G, axis=1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])  # (B, H)
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A)[..., None, None]                      # (B,H,1,1)
+    upd = jnp.einsum("bhn,bhp->bhnp", Bmat.astype(jnp.float32),
+                     xs.astype(jnp.float32) * dt[..., None])
+    state = decay * state + upd
+    y = jnp.einsum("bhn,bhnp->bhp", Cmat.astype(jnp.float32), state)
+    y = y.astype(x.dtype) + xs * lp["D_skip"].astype(x.dtype)[None, :, None]
+    y = y.reshape(Bsz, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 lp["gate_norm"], cfg.norm_eps)
+    return y @ lp["out_proj"], state, new_tail
+
+
+# ---------------------------------------------------------------------------
+# the attention-free LM (mamba2-370m)
+# ---------------------------------------------------------------------------
+
+def param_table(cfg: ModelConfig) -> Dict[str, Tuple[tuple, tuple]]:
+    t = {
+        "embed": ((cfg.vocab_size, cfg.d_model), ("vocab", None)),
+        "final_norm": ((cfg.d_model,), (None,)),
+        "lm_head": ((cfg.d_model, cfg.vocab_size), (None, "vocab")),
+    }
+    for k, v in mixer_table(cfg, cfg.num_layers).items():
+        t[f"layers/{k}"] = v
+    return t
+
+
+def _resolve(cfg, rules: Optional[Rules], axes, shape):
+    """vocab/heads labels -> mesh axes, with flat-dim divisibility checks."""
+    if rules is None:
+        return tuple(None for _ in axes)
+    out = []
+    for a, size in zip(axes, shape):
+        if a in ("vocab", "heads"):
+            axis = getattr(rules, a)
+            out.append(axis if size % max(rules.axis_size(axis), 1) == 0
+                       else None)
+        else:
+            out.append(None)
+    return tuple(out)
+
+
+def param_shapes(cfg):
+    return {k: jax.ShapeDtypeStruct(s, jnp.float32
+                                    if k.endswith(("A_log", "dt_bias")) else cfg.param_dtype)
+            for k, (s, _a) in param_table(cfg).items()}
+
+
+def param_specs(cfg, rules: Rules):
+    return {k: rules.sharding(*_resolve(cfg, rules, a, s))
+            for k, (s, a) in param_table(cfg).items()}
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, jax.Array]:
+    table = param_table(cfg)
+    keys = jax.random.split(key, len(table))
+    out = {}
+    for (name, (shape, _a)), k in zip(sorted(table.items()), keys):
+        if "norm" in name:
+            out[name] = init_norm(shape, cfg.param_dtype)
+        elif name.endswith("A_log"):
+            out[name] = jnp.log(jnp.linspace(1.0, 16.0, shape[-1]))[None] \
+                .repeat(shape[0], 0).astype(jnp.float32)
+        elif name.endswith(("D_skip", "conv_b")):
+            out[name] = jnp.zeros(shape, cfg.param_dtype) if "conv" in name \
+                else jnp.ones(shape, cfg.param_dtype)
+        elif name.endswith("dt_bias"):
+            out[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            out[name] = init_dense(k, shape, cfg.param_dtype)
+    return out
+
+
+def _split(params):
+    glob = {k: v for k, v in params.items() if not k.startswith("layers/")}
+    layers = {k.split("/", 1)[1]: v for k, v in params.items()
+              if k.startswith("layers/")}
+    return glob, layers
+
+
+def forward(params, tokens, cfg: ModelConfig, rules: Optional[Rules] = None,
+            positions=None, embeds=None, last_only: bool = False):
+    glob, layers = _split(params)
+    x = embeds if embeds is not None else embed_lookup(glob["embed"], tokens, rules)
+    x = x.astype(cfg.param_dtype)
+    if rules is not None:
+        x = rules.act_btd(x)
+
+    def block(x, lp):
+        h = rms_norm(x, lp["norm"], cfg.norm_eps)
+        return x + mixer_apply(lp, h, cfg, rules)
+
+    if rules is not None and rules.remat == "full":
+        block = jax.checkpoint(block)
+    elif rules is not None and rules.remat == "dots":
+        block = jax.checkpoint(
+            block, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+    x, _ = lax.scan(lambda c, lp: (block(c, lp), None), x, layers,
+                    unroll=(rules.scan_unroll if rules else False))
+    if last_only:
+        x = x[:, -1:]
+    x = rms_norm(x, glob["final_norm"], cfg.norm_eps)
+    logits = x @ glob["lm_head"]
+    if rules is not None:
+        logits = rules.cs(logits, rules.batch, None, rules.vocab) \
+            if last_only else rules.logits(logits)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, batch, cfg, rules=None):
+    logits, _ = forward(params, batch["tokens"], cfg, rules)
+    ce = cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return ce, {"ce": ce}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int = 0,
+               filled: Optional[int] = None):
+    s, di, nh, conv_dim, _ = _dims(cfg)
+    L = cfg.num_layers
+    return {
+        "state": jnp.zeros((L, batch, nh, s.state_dim, s.head_dim), jnp.float32),
+        "conv": jnp.zeros((L, batch, s.conv_width - 1, conv_dim), cfg.param_dtype),
+        "len": jnp.full((batch,), filled or 0, jnp.int32),
+    }
+
+
+def cache_specs(cfg: ModelConfig, rules: Rules):
+    return {
+        "state": rules.sharding(None, rules.batch, rules.heads, None, None),
+        "conv": rules.sharding(None, rules.batch, None, rules.heads),
+        "len": rules.sharding(rules.batch),
+    }
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig,
+                rules: Optional[Rules] = None, positions=None):
+    glob, layers = _split(params)
+    x = embed_lookup(glob["embed"], tokens[:, None], rules)[:, 0]
+    x = x.astype(cfg.param_dtype)
+
+    def layer(carry, xs):
+        x = carry
+        lp, st, ct = xs
+        h = rms_norm(x, lp["norm"], cfg.norm_eps)
+        out, st, ct = mixer_decode(lp, h, st, ct, cfg)
+        return x + out, (st, ct)
+
+    x, (st_all, ct_all) = lax.scan(layer, x,
+                                   (layers, cache["state"], cache["conv"]),
+                                   unroll=(rules.scan_unroll if rules else False))
+    x = rms_norm(x, glob["final_norm"], cfg.norm_eps)
+    logits = x @ glob["lm_head"]
+    if rules is not None:
+        logits = rules.cs(logits, rules.batch, rules.vocab)
+    return logits, {"state": st_all, "conv": ct_all, "len": cache["len"] + 1}

@@ -1,0 +1,379 @@
+"""Mixture-of-Experts with capacity-provisioned, dimension-ordered dispatch.
+
+The paper's network mechanics map one-to-one onto MoE routing:
+
+* expert **capacity buffers** are the endpoint input FIFOs: a destination
+  must absorb everything the network can deliver, so buffers are provisioned
+  by the capacity factor and overflow tokens are *dropped* (the paper's
+  Option 3 trade-off, measured by the aux/drop stats we return);
+* the **dispatch** is a remote-store scatter, the **combine** the
+  reverse-path gather;
+* ``dispatch="xy"`` routes tokens in two phases — first along the ``data``
+  axis (rebalance across rows), then along the ``model`` axis (deliver to
+  the expert's home column) — the XY dimension-ordered route of C4 and the
+  hierarchical all-to-all used across pods in production MoE systems.
+
+Three dispatch modes (auto-selected by divisibility, overridable):
+
+* ``tp``  — experts replicated, FFN width sharded (tensor-parallel experts;
+            no token movement).  Required when E < |model|.
+* ``ep``  — experts sharded over ``model``; activations replicated over
+            ``model``, so dispatch is a local SELECT and combine is the
+            row-parallel psum (GSPMD inserts it).
+* ``xy``  — sequence-sharded activations with explicit two-phase all-to-all
+            (shard_map island).  The paper-faithful mode.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax, shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.kernels import grouped_matmul
+from .layers import init_dense
+
+__all__ = ["init_moe", "moe_block", "router_topk", "capacity"]
+
+
+def _pmean_all(x, names):
+    """pmean over every manual axis, pcasting to varying only where the
+    value is not already varying (VMA-safe)."""
+    ax = tuple(sorted(names))
+    missing = tuple(a for a in ax if a not in jax.typeof(x).vma)
+    if missing:
+        x = lax.pcast(x, missing, to="varying")
+    return lax.pmean(x, ax)
+
+
+def init_moe(key, cfg: ModelConfig, m: MoEConfig, dtype) -> Dict:
+    D, E, F = cfg.d_model, m.num_experts, m.d_ff_expert
+    ks = jax.random.split(key, 4)
+    return {
+        "router": init_dense(ks[0], (D, E), jnp.float32),  # router in fp32
+        "w_gate": init_dense(ks[1], (E, D, F), dtype),
+        "w_up": init_dense(ks[2], (E, D, F), dtype),
+        "w_down": init_dense(ks[3], (E, F, D), dtype),
+    }
+
+
+def capacity(tokens: int, m: MoEConfig, over: float = 1.0) -> int:
+    """FIFO provisioning (paper C2): slots per expert for ``tokens``
+    assignments = ceil(tokens * top_k / E * capacity_factor * over),
+    rounded up to a multiple of 8 for TPU-friendly layouts."""
+    raw = int(tokens * m.top_k * m.capacity_factor * over / m.num_experts) + 1
+    return max(8, -(-raw // 8) * 8)
+
+
+def router_topk(x2d: jax.Array, w_router: jax.Array, k: int,
+                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Top-k routing. x2d: (T, D).  Returns (idx (T,k), weights (T,k) fp32
+    renormalized, aux_loss scalar)."""
+    logits = x2d.astype(jnp.float32) @ w_router.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                 # (T, E)
+    weights, idx = lax.top_k(probs, k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss: E * sum_e f_e * p_e
+    E = w_router.shape[-1]
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(idx[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = E * jnp.sum(me * ce)
+    return idx, weights, aux
+
+
+def _fifo_slots(assign: jax.Array, num_experts: int, cap: int):
+    """Slot allocation in arrival order (the FIFO): returns (slot, keep)."""
+    onehot = jax.nn.one_hot(assign, num_experts, dtype=jnp.int32)  # (A, E)
+    ranks = jnp.cumsum(onehot, axis=0) - onehot
+    slot = jnp.take_along_axis(ranks, assign[:, None], axis=1)[:, 0]
+    keep = slot < cap
+    return slot, keep
+
+
+def _dispatch(x2d, assign, slot, keep, num_experts, cap):
+    """Scatter tokens into (E, cap, D) capacity buffers; dropped tokens
+    (FIFO overflow) simply never land."""
+    T_k = assign.shape[0]
+    token_of = jnp.arange(T_k) // (T_k // x2d.shape[0])
+    e_idx = jnp.where(keep, assign, num_experts)        # sink row for drops
+    buf = jnp.zeros((num_experts + 1, cap, x2d.shape[1]), x2d.dtype)
+    buf = buf.at[e_idx, jnp.minimum(slot, cap - 1)].add(x2d[token_of])
+    return buf[:num_experts]
+
+
+def _combine(buf_out, assign, slot, keep, weights2d, T):
+    """Gather expert outputs back to token order with routing weights."""
+    gathered = buf_out[jnp.where(keep, assign, 0),
+                       jnp.minimum(slot, buf_out.shape[1] - 1)]
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    k = assign.shape[0] // T
+    gathered = gathered.reshape(T, k, -1)
+    return (gathered.astype(jnp.float32)
+            * weights2d[..., None]).sum(1)
+
+
+def _expert_ffn(buf, w_gate, w_up, w_down):
+    """(E, cap, D) -> (E, cap, D) SwiGLU via grouped matmul."""
+    g = grouped_matmul(buf, w_gate)
+    u = grouped_matmul(buf, w_up)
+    h = (jax.nn.silu(g.astype(jnp.float32)) * u.astype(jnp.float32)).astype(buf.dtype)
+    return grouped_matmul(h, w_down)
+
+
+# ---------------------------------------------------------------------------
+# modes
+# ---------------------------------------------------------------------------
+
+def _moe_dense_layout(x2d, params, m: MoEConfig, rules, expert_axis,
+                      ff_axis) -> Tuple[jax.Array, jax.Array]:
+    """Shared path for ``tp`` (ff_axis sharded) and ``ep`` (expert_axis
+    sharded): GSPMD places the collectives implied by the constraints."""
+    T = x2d.shape[0]
+    idx, weights, aux = router_topk(x2d, params["router"], m.top_k)
+    assign = idx.reshape(-1)
+    cap = capacity(T, m)
+    slot, keep = _fifo_slots(assign, m.num_experts, cap)
+    buf = _dispatch(x2d, assign, slot, keep, m.num_experts, cap)
+    if rules is not None:
+        buf = rules.cs(buf, expert_axis, None, None)
+        wg = rules.cs(params["w_gate"], expert_axis, None, ff_axis)
+        wu = rules.cs(params["w_up"], expert_axis, None, ff_axis)
+        wd = rules.cs(params["w_down"], expert_axis, ff_axis, None)
+    else:
+        wg, wu, wd = params["w_gate"], params["w_up"], params["w_down"]
+    out_buf = _expert_ffn(buf, wg, wu, wd)
+    if rules is not None:
+        out_buf = rules.cs(out_buf, expert_axis, None, None)
+    out = _combine(out_buf, assign, slot, keep, weights, T)
+    return out, aux
+
+
+def _moe_local(x_btd, params, m: MoEConfig, rules
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Local-dispatch MoE for replicated/ff-sharded experts (E < columns).
+
+    When experts are NOT placed on specific chips (weights replicated over
+    the mesh, FFN width TP-sharded), tokens never need to move: each device
+    routes only its LOCAL tokens into local capacity buffers and runs the
+    grouped matmul on them.  The only collective is the row-parallel
+    reduction of the combined output (after w_down) — same as a dense FFN —
+    done on the bf16 wire format and reduce-SCATTERED straight back to the
+    outer seq-sharded layout.
+
+    This is the paper's "locality of remote accesses" submode: prefer
+    keeping traffic on-tile over provisioning N^2 FIFO space.  Without it
+    (the naive GSPMD lowering of the dense layout), the *global* capacity
+    buffers become partial sums that XLA all-reduces across every shard —
+    10+ TB/device/step on mixtral (EXPERIMENTS.md §Perf).
+
+    NOTE: activations enter replicated along the ff axis (seq sharding
+    dropped) — every column must hold the SAME tokens or the ff reduction
+    after w_down would sum different tokens\' outputs.
+    """
+    mesh = rules.mesh
+    batch_spec = rules._clean(rules.batch)
+    ff_axis = rules._clean(rules.ff)
+    names = set()
+    for a in (batch_spec, ff_axis):
+        names |= {a} if isinstance(a, str) else set(a or ())
+    ff_names = ((ff_axis,) if isinstance(ff_axis, str)
+                else tuple(ff_axis or ()))
+    # seq long enough to scatter back over ff? (decode has S == 1)
+    scatter = bool(ff_names) and all(
+        x_btd.shape[1] % rules.axis_size(a) == 0 for a in ff_names) \
+        and x_btd.shape[1] > 1
+
+    def island(x_l, router, wg, wu, wd):
+        b_l, s_l, D = x_l.shape
+        x2d = x_l.reshape(-1, D)
+        T_l = x2d.shape[0]
+        idx, weights, aux = router_topk(x2d, router, m.top_k)
+        assign = idx.reshape(-1)
+        cap = capacity(T_l, m)                 # per-DEVICE FIFO provisioning
+        slot, keep = _fifo_slots(assign, m.num_experts, cap)
+        buf = _dispatch(x2d, assign, slot, keep, m.num_experts, cap)
+        out_buf = _expert_ffn(buf, wg, wu, wd)  # partial over ff shards
+        out = _combine(out_buf, assign, slot, keep, weights, T_l)
+        out = out.astype(x_l.dtype).reshape(b_l, s_l, D)
+        if scatter:
+            # bf16 wire + ring reduce-scatter back to seq-sharded layout:
+            # 2x less operand bytes than f32, 2x less wire than all-reduce
+            for a in ff_names:
+                out = lax.psum_scatter(out, a, scatter_dimension=1,
+                                       tiled=True)
+        elif ff_names:
+            out = lax.psum(out, ff_names)
+        aux = _pmean_all(aux, names)
+        return out, aux
+
+    sm = shard_map(
+        island, mesh=mesh,
+        in_specs=(P(batch_spec, None, None), P(None, None),
+                  P(None, None, ff_axis), P(None, None, ff_axis),
+                  P(None, ff_axis, None)),
+        out_specs=(P(batch_spec, ff_axis if scatter else None, None), P()),
+        axis_names=names)
+    return sm(x_btd, params["router"], params["w_gate"], params["w_up"],
+              params["w_down"])
+
+
+def _moe_xy(x_btd, params, m: MoEConfig, rules) -> Tuple[jax.Array, jax.Array]:
+    """Paper-faithful two-phase dispatch (shard_map island).
+
+    Expects activations sequence-sharded over ``model`` and batch-sharded
+    over ``data``.  Phase Y (data axis): round-robin token rebalance across
+    rows.  Phase X (model axis): deliver to the expert's home column.
+    Combine runs the two phases in reverse (the response network).
+    """
+    mesh = rules.mesh
+    d_axis, m_axis = "data", "model"
+    R = mesh.shape[d_axis]
+    C = mesh.shape[m_axis]
+    E = m.num_experts
+    assert E % C == 0, f"xy dispatch needs experts {E} divisible by cols {C}"
+    e_loc = E // C
+    batch_spec = rules._clean(rules.batch)
+
+    use_y = getattr(rules, "dispatch", "xy") != "x"
+
+    def island(x_l, router, wg, wu, wd):
+        b_l, s_l, D = x_l.shape
+        x2d = x_l.reshape(-1, D)
+        T = x2d.shape[0]
+        idx, weights, aux = router_topk(x2d, router, m.top_k)
+        assign = idx.reshape(-1)                       # (T*k,)
+        A = assign.shape[0]
+        token_of = jnp.arange(A) // m.top_k
+
+        if use_y:
+            # ---- Phase Y (rows): round-robin rebalance along `data` ------
+            row_of = jnp.arange(A) % R                 # deterministic RR
+            cap1 = max(8, -(-int(A / R * m.capacity_factor) // 8) * 8)
+            slot1, keep1 = _fifo_slots(row_of, R, cap1)
+            r_idx = jnp.where(keep1, row_of, R)
+            buf1 = jnp.zeros((R + 1, cap1, D), x_l.dtype) \
+                .at[r_idx, jnp.minimum(slot1, cap1 - 1)].add(x2d[token_of])[:R]
+            meta1 = jnp.zeros((R + 1, cap1), jnp.int32) \
+                .at[r_idx, jnp.minimum(slot1, cap1 - 1)].add(assign + 1)[:R]
+            buf1 = lax.all_to_all(buf1, d_axis, split_axis=0, concat_axis=0,
+                                  tiled=True)          # rows merged here
+            meta1 = lax.all_to_all(meta1, d_axis, split_axis=0,
+                                   concat_axis=0, tiled=True)
+            buf1 = buf1.reshape(R * cap1, D)
+            e_in = meta1.reshape(R * cap1) - 1         # -1 = empty slot
+        else:
+            # ---- "x" dispatch: straight to the expert's home column ------
+            # (beyond-paper variant: skips the row rebalance — half the
+            # wire when rows are already balanced; §Perf/moonshot)
+            buf1 = x2d[token_of]                       # (A, D)
+            e_in = assign
+
+        # ---- Phase X (columns): deliver to expert home column ------------
+        col_of = jnp.where(e_in >= 0, e_in // e_loc, C)
+        rows1 = R * cap1 if use_y else A
+        cap2 = max(8, -(-int(rows1 * (1 if use_y else m.capacity_factor)
+                             / C) // 8) * 8)
+        slot2, keep2 = _fifo_slots(col_of, C + 1, cap2)
+        keep2 &= e_in >= 0
+        c_idx = jnp.where(keep2, col_of, C)
+        buf2 = jnp.zeros((C + 1, cap2, D), x_l.dtype) \
+            .at[c_idx, jnp.minimum(slot2, cap2 - 1)].add(buf1)[:C]
+        meta2 = jnp.zeros((C + 1, cap2), jnp.int32) \
+            .at[c_idx, jnp.minimum(slot2, cap2 - 1)].add(e_in + 1)[:C]
+        buf2 = lax.all_to_all(buf2, m_axis, split_axis=0, concat_axis=0,
+                              tiled=True)
+        meta2 = lax.all_to_all(meta2, m_axis, split_axis=0, concat_axis=0,
+                               tiled=True)
+        toks = buf2.reshape(C * cap2, D)
+        e_here = meta2.reshape(C * cap2) - 1           # global expert id
+        col = lax.axis_index(m_axis)
+        e_local = jnp.where(e_here >= 0, e_here - col * e_loc, e_loc)
+
+        # ---- local expert FFN over capacity buffers ----------------------
+        cap3 = max(8, -(-int(C * cap2 / e_loc) // 8) * 8)
+        slot3, keep3 = _fifo_slots(jnp.clip(e_local, 0, e_loc), e_loc + 1, cap3)
+        keep3 &= e_here >= 0
+        el_idx = jnp.where(keep3, e_local, e_loc)
+        ebuf = jnp.zeros((e_loc + 1, cap3, D), x_l.dtype) \
+            .at[el_idx, jnp.minimum(slot3, cap3 - 1)].add(toks)[:e_loc]
+        eout = _expert_ffn(ebuf, wg, wu, wd)
+        # un-scatter expert outputs back into the phase-X receive layout
+        back = eout[jnp.where(keep3, e_local, 0),
+                    jnp.minimum(slot3, cap3 - 1)]
+        back = jnp.where(keep3[:, None], back, 0).astype(x_l.dtype)
+
+        # ---- reverse path (the response network): X phase, then Y --------
+        rbuf2 = lax.all_to_all(back.reshape(C, cap2, D), m_axis,
+                               split_axis=0, concat_axis=0, tiled=True)
+        # rows I sent to column c sit at (c, slot2) of the returned buffer
+        got = rbuf2[jnp.where(keep2, col_of, 0),
+                    jnp.minimum(slot2, cap2 - 1)]
+        got = jnp.where(keep2[:, None], got, 0)
+        if use_y:
+            rbuf1 = lax.all_to_all(got.reshape(R, cap1, D), d_axis,
+                                   split_axis=0, concat_axis=0, tiled=True)
+            # un-scatter phase Y back to (token, k) assignments
+            out_a = rbuf1[jnp.where(keep1, row_of, 0),
+                          jnp.minimum(slot1, cap1 - 1)]
+            out_a = jnp.where(keep1[:, None], out_a, 0)
+        else:
+            out_a = got                                # already (A, D)
+        out = (out_a.reshape(T, m.top_k, D).astype(jnp.float32)
+               * weights[..., None]).sum(1)
+        # aux must come out replicated over EVERY manual axis (pod included
+        # on the multi-pod mesh), or the P() out_spec is unprovable
+        aux = _pmean_all(aux, names)
+        return out.reshape(b_l, s_l, D).astype(x_l.dtype), aux
+
+    names = {d_axis, m_axis} | ({batch_spec} if isinstance(batch_spec, str)
+                                else set(batch_spec or ()))
+    pspecs = (P(None, None), P(m_axis, None, None), P(m_axis, None, None),
+              P(m_axis, None, None))
+    sm = shard_map(
+        island, mesh=mesh,
+        in_specs=(P(batch_spec, m_axis, None),) + pspecs,
+        out_specs=(P(batch_spec, m_axis, None), P()),
+        axis_names=names)
+    return sm(x_btd, params["router"], params["w_gate"], params["w_up"],
+              params["w_down"])
+
+
+def moe_block(x: jax.Array, params: Dict, cfg: ModelConfig, rules=None
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Apply the MoE FFN to (B, S, D) activations; returns (out, aux_loss)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    mode = rules.dispatch if rules is not None else "tp"
+    ep = rules.axis_size(rules.experts) if rules is not None else 1
+    if mode in ("auto", "xy", "x", "flat", "local"):
+        # xy needs sequence sharding + divisibility; fall back otherwise
+        if mode in ("xy", "x") and rules is not None \
+                and rules.seq is not None \
+                and m.num_experts % rules.axis_size("model") == 0:
+            out, aux = _moe_xy(x, params, m, rules)
+            return out.astype(x.dtype), aux
+        if m.num_experts % max(ep, 1) == 0 and ep > 1 and mode != "local":
+            mode = "ep"
+        elif rules is not None and rules.axis_size(rules.ff) > 1:
+            # experts not placeable (E % columns != 0): keep tokens LOCAL,
+            # shard expert FFN width instead (EXPERIMENTS.md §Perf/mixtral)
+            out, aux = _moe_local(x, params, m, rules)
+            return out.astype(x.dtype), aux
+        else:
+            mode = "tp"
+    x2d = x.reshape(-1, D)
+    if mode == "ep":
+        out, aux = _moe_dense_layout(x2d, params, m, rules,
+                                     expert_axis=rules.experts if rules else None,
+                                     ff_axis=None)
+    elif mode == "tp":
+        out, aux = _moe_dense_layout(x2d, params, m, rules,
+                                     expert_axis=None,
+                                     ff_axis=rules.ff if rules else None)
+    else:
+        raise ValueError(f"unknown dispatch mode {mode!r}")
+    return out.reshape(B, S, D).astype(x.dtype), aux

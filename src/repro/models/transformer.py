@@ -1,0 +1,571 @@
+"""Decoder-only transformer (dense / MoE / VLM backbones).
+
+Covers qwen2-72b, yi-34b, qwen1.5-32b, stablelm-3b, mixtral-8x7b,
+moonshot-v1-16b-a3b and qwen2-vl-72b.  Layers are stacked along a leading
+``L`` dimension and executed with ``lax.scan`` (+ configurable remat), so
+the compiled HLO contains each layer body exactly once regardless of depth.
+
+Params / shapes / shardings all derive from one table (:func:`param_table`),
+which keeps init, the dry-run's ShapeDtypeStructs, and the NamedShardings
+structurally in sync.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax, shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.parallel.sharding import Rules
+from . import moe as moe_mod
+from .attention import attention, decode_attention, repeat_kv
+from .layers import (cross_entropy, embed_lookup, init_dense, init_norm,
+                     mrope, rms_norm, rope, swiglu)
+
+__all__ = ["param_table", "init_params", "param_shapes", "param_specs",
+           "forward", "loss_fn", "init_cache", "cache_specs", "decode_step"]
+
+AUX_COEF = 0.01
+
+
+# ---------------------------------------------------------------------------
+# Parameter table: name -> (shape, logical sharding axes, init scale or None)
+# Logical axes: "vocab" | "heads" | "ff" | "experts" | "layers"(=None) | None
+# ---------------------------------------------------------------------------
+
+def param_table(cfg: ModelConfig) -> Dict[str, Tuple[tuple, tuple]]:
+    D, hd = cfg.d_model, cfg.head_dim
+    H, K, F, V, L = (cfg.num_heads, cfg.num_kv_heads, cfg.d_ff,
+                     cfg.vocab_size, cfg.num_layers)
+    t: Dict[str, Tuple[tuple, tuple]] = {
+        "embed": ((V, D), ("vocab", None)),
+        "final_norm": ((D,), (None,)),
+    }
+    if not cfg.tie_embeddings:
+        t["lm_head"] = ((D, V), (None, "vocab"))
+    lt: Dict[str, Tuple[tuple, tuple]] = {
+        "attn_norm": ((L, D), (None, None)),
+        "wq": ((L, D, H * hd), (None, None, "heads")),
+        "wk": ((L, D, K * hd), (None, None, "kv_heads")),  # replicated if K<TP
+        "wv": ((L, D, K * hd), (None, None, "kv_heads")),
+        "wo": ((L, H * hd, D), (None, "heads", None)),
+        "mlp_norm": ((L, D), (None, None)),
+    }
+    if cfg.qkv_bias:
+        lt["bq"] = ((L, H * hd), (None, "heads"))
+        lt["bk"] = ((L, K * hd), (None, "kv_heads"))
+        lt["bv"] = ((L, K * hd), (None, "kv_heads"))
+    if F > 0:
+        lt["w_gate"] = ((L, D, F), (None, None, "ff"))
+        lt["w_up"] = ((L, D, F), (None, None, "ff"))
+        lt["w_down"] = ((L, F, D), (None, "ff", None))
+    if cfg.moe is not None:
+        m = cfg.moe
+        E, Fe = m.num_experts, m.d_ff_expert
+        # EP when E divides the model axis; otherwise expert-TP over ff.
+        exp_axes = ("experts", None, "ff_expert")
+        lt["router"] = ((L, D, E), (None, None, None))
+        lt["moe_gate"] = ((L, E, D, Fe), (None,) + exp_axes)
+        lt["moe_up"] = ((L, E, D, Fe), (None,) + exp_axes)
+        lt["moe_down"] = ((L, E, Fe, D), (None, "experts", "ff_expert", None))
+    for k, v in lt.items():
+        t[f"layers/{k}"] = v
+    return t
+
+
+def _resolve_axis(cfg: ModelConfig, rules: Optional[Rules], name,
+                  dim_size: Optional[int] = None):
+    """Map table axis labels to Rules attributes, handling the EP/TP choice
+    for MoE expert weights.
+
+    Divisibility is checked on the FLAT weight dimension (``dim_size``), not
+    the head count: e.g. yi-34b's 56 heads do not divide TP=16, but its flat
+    H*hd = 7168 projection dim does, so the *weights* stay sharded (memory
+    is what matters) while the attention activations fall back to GSPMD
+    propagation (``heads_even`` in :func:`_attn_block`)."""
+    if rules is None or name is None:
+        return None
+
+    def fits(axis, size):
+        return axis if (size is None
+                        or size % max(rules.axis_size(axis), 1) == 0) else None
+
+    if name in ("heads", "kv_heads"):
+        return fits(rules.heads, dim_size)
+    if name in ("vocab", "ff"):
+        return fits(getattr(rules, name), dim_size)
+    if name in ("experts", "ff_expert"):
+        ep = rules.axis_size(rules.experts)
+        use_ep = cfg.moe is not None and ep > 1 and \
+            cfg.moe.num_experts % ep == 0 and rules.dispatch != "tp"
+        if name == "experts":
+            return rules.experts if use_ep else None
+        return None if use_ep else fits(rules.ff, dim_size)
+    raise KeyError(name)
+
+
+def param_shapes(cfg: ModelConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    dt = cfg.param_dtype
+    out = {}
+    for name, (shape, _axes) in param_table(cfg).items():
+        d = jnp.float32 if name.endswith("router") else dt
+        out[name] = jax.ShapeDtypeStruct(shape, d)
+    return out
+
+
+def param_specs(cfg: ModelConfig, rules: Rules) -> Dict[str, Any]:
+    out = {}
+    for name, (shape, axes) in param_table(cfg).items():
+        resolved = [_resolve_axis(cfg, rules, a, shape[i])
+                    for i, a in enumerate(axes)]
+        out[name] = rules.sharding(*resolved)
+    return out
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict[str, jax.Array]:
+    table = param_table(cfg)
+    keys = jax.random.split(key, len(table))
+    out = {}
+    for (name, (shape, _axes)), k in zip(sorted(table.items()), keys):
+        if "norm" in name:
+            out[name] = init_norm(shape, cfg.param_dtype)
+        elif name.startswith("layers/b"):
+            out[name] = jnp.zeros(shape, cfg.param_dtype)
+        elif name.endswith("router"):
+            out[name] = init_dense(k, shape, jnp.float32)
+        else:
+            out[name] = init_dense(k, shape, cfg.param_dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _split_layers(params: Dict[str, jax.Array]):
+    glob = {k: v for k, v in params.items() if not k.startswith("layers/")}
+    layers = {k.split("/", 1)[1]: v for k, v in params.items()
+              if k.startswith("layers/")}
+    return glob, layers
+
+
+def _manual_tp_ok(cfg: ModelConfig, rules: Optional[Rules]) -> bool:
+    """Explicit-island Megatron TP applies when whole q heads land on each
+    column and the per-column heads align with GQA groups."""
+    if rules is None or not rules.manual_tp or rules.heads != "model" \
+            or not rules.has_axis("model"):
+        return False
+    tp = rules.axis_size("model")
+    H, K = cfg.num_heads, cfg.num_kv_heads
+    if tp <= 1 or H % tp:
+        return False
+    hq, g = H // tp, H // K
+    return hq % g == 0 or g % hq == 0
+
+
+def _attn_manual(x, lp, cfg: ModelConfig, rules: Rules, positions):
+    """Megatron TP attention as an explicit shard_map island over `model`.
+
+    Per column: all-gather the normed block input ONCE, project into the
+    column's own q heads (and its GQA kv slice), attend locally, and
+    reduce-scatter the wo product straight back to the seq-sharded layout.
+    Forward collectives per layer: 1 AG(h) + 2 AG(k,v) + 1 RS(out) — vs
+    GSPMD's per-tensor q/k/v all-to-all round-trips (EXPERIMENTS.md §Perf).
+    """
+    B, S, D = x.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    tp = rules.axis_size("model")
+    hq, g = H // tp, H // K
+    kv_w = max(hq // g, 1)                       # kv heads per column
+    seq_sharded = rules.overlaps(rules.seq, "model") and S % tp == 0
+
+    def island(x_l, positions, attn_norm, wq, wk, wv, wo, bq, bk, bv):
+        col = lax.axis_index("model")
+        bl = x_l.shape[0]
+        h = rms_norm(x_l, attn_norm, cfg.norm_eps)
+        if seq_sharded:
+            h = lax.all_gather(h, "model", axis=1, tiled=True)
+        sl = h.shape[1]                           # full seq after gather
+        q = h @ wq                                # (b, S, hq*hd) local heads
+        k = h @ wk                                # (b, S, K*hd/tp) partial
+        v = h @ wv
+        if cfg.qkv_bias:
+            q, k, v = q + bq, k + bk, v + bv
+        # k/v columns hold K*hd/tp lanes; gather to whole kv heads and take
+        # this column's GQA slice
+        k = lax.all_gather(k, "model", axis=2, tiled=True) \
+            .reshape(bl, sl, K, hd)
+        v = lax.all_gather(v, "model", axis=2, tiled=True) \
+            .reshape(bl, sl, K, hd)
+        kv0 = (col * hq) // g
+        k = lax.dynamic_slice_in_dim(k, kv0, kv_w, axis=2)
+        v = lax.dynamic_slice_in_dim(v, kv0, kv_w, axis=2)
+        q = q.reshape(bl, sl, hq, hd)
+        if cfg.mrope_sections is not None:       # (3, b, S) position streams
+            q = mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+            k = mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+            pos1d = positions[0]
+        else:
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+            pos1d = positions
+        out = attention(q, k, v, impl=rules.attn_impl, causal=True,
+                        window=cfg.sliding_window, q_positions=pos1d,
+                        k_positions=pos1d,
+                        unroll=rules.scan_unroll)
+        out = (out.reshape(bl, sl, hq * hd) @ wo).astype(x_l.dtype)
+        if seq_sharded:                           # back to seq-sharded
+            out = lax.psum_scatter(out, "model", scatter_dimension=1,
+                                   tiled=True)
+        else:
+            out = lax.psum(out, "model")
+        return x_l + out
+
+    # fully-manual island: partial-manual (auto batch axes) trips an XLA
+    # CPU crash ("Invalid binary instruction opcode copy"); and decode/MoE
+    # islands are fully manual anyway — keep one convention.
+    bspec = rules._clean(rules.batch)
+    names = {"model"} | ({bspec} if isinstance(bspec, str)
+                         else set(bspec or ()))
+    zero = jnp.zeros((), x.dtype)
+    args = (x, positions, lp["attn_norm"], lp["wq"], lp["wk"], lp["wv"],
+            lp["wo"],
+            lp.get("bq", zero), lp.get("bk", zero), lp.get("bv", zero))
+    specs = (P(bspec, "model" if seq_sharded else None, None),  # x
+             P(None, bspec, None) if cfg.mrope_sections is not None
+             else P(bspec, None),                               # positions
+             P(None),                                           # norm
+             P(None, "model"), P(None, "model"), P(None, "model"),
+             P("model", None),
+             P("model") if cfg.qkv_bias else P(),
+             P("model") if cfg.qkv_bias else P(),
+             P("model") if cfg.qkv_bias else P())
+    sm = shard_map(island, mesh=rules.mesh, in_specs=specs,
+                   out_specs=P(bspec, "model" if seq_sharded else None, None),
+                   axis_names=names)
+    return sm(*args)
+
+
+def _mlp_manual(x, lp, cfg: ModelConfig, rules: Rules):
+    """Megatron TP SwiGLU island: AG(h) -> local F/tp -> RS(out)."""
+    S = x.shape[1]
+    tp = rules.axis_size("model")
+    seq_sharded = rules.overlaps(rules.seq, "model") and S % tp == 0
+
+    def island(x_l, norm, wg, wu, wd):
+        h = rms_norm(x_l, norm, cfg.norm_eps)
+        if seq_sharded:
+            h = lax.all_gather(h, "model", axis=1, tiled=True)
+        gte = h @ wg
+        u = h @ wu
+        act = jax.nn.silu(gte.astype(jnp.float32)).astype(h.dtype) * u
+        out = (act @ wd).astype(x_l.dtype)
+        if seq_sharded:
+            out = lax.psum_scatter(out, "model", scatter_dimension=1,
+                                   tiled=True)
+        else:
+            out = lax.psum(out, "model")
+        return x_l + out
+
+    bspec = rules._clean(rules.batch)
+    names = {"model"} | ({bspec} if isinstance(bspec, str)
+                         else set(bspec or ()))
+    xspec = P(bspec, "model" if seq_sharded else None, None)
+    sm = shard_map(island, mesh=rules.mesh,
+                   in_specs=(xspec, P(None), P(None, "model"),
+                             P(None, "model"), P("model", None)),
+                   out_specs=xspec, axis_names=names)
+    return sm(x, lp["mlp_norm"], lp["w_gate"], lp["w_up"], lp["w_down"])
+
+
+def _attn_block(x, lp, cfg: ModelConfig, rules: Optional[Rules],
+                positions, layer_pos_bias=None):
+    if _manual_tp_ok(cfg, rules):
+        # explicit Megatron island (8x less collective traffic than the
+        # GSPMD auto placement — EXPERIMENTS.md §Perf/qwen2)
+        return _attn_manual(x, lp, cfg, rules, positions)
+    B, S, D = x.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+    # (NOTE: a `cs(h, batch, None, None)` "Megatron-SP hint" here was
+    # measured 0% on qwen2 and a 2.6x REGRESSION on yi/qwen1.5 — GSPMD
+    # re-reshards around advisory constraints; see EXPERIMENTS.md §Perf)
+    q = h @ lp["wq"]
+    k = h @ lp["wk"]
+    v = h @ lp["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, K, hd)
+    v = v.reshape(B, S, K, hd)
+    heads_even = rules is not None and \
+        H % max(rules.axis_size(rules.heads), 1) == 0
+    if heads_even:
+        q = rules.act_bthd(q)
+    if cfg.mrope_sections is not None:
+        q = mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+        k = mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+        pos1d = positions[0]
+    else:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        pos1d = positions
+    # GQA layout choice (EXPERIMENTS.md §Perf/qwen2): grouped attention
+    # (k/v at K heads) avoids materializing repeated KV but forces seq
+    # all-gathers of k/v when K < TP; with Megatron-SP the repeated,
+    # head-sharded layout needs NO attention-side collectives at all —
+    # measured better, so repeat is the default and grouped is the
+    # ablation (rules.gqa_grouped).
+    if rules is None or not rules.gqa_grouped:
+        k = repeat_kv(k, H // K)
+        v = repeat_kv(v, H // K)
+    if rules is not None and k.shape[2] % max(
+            rules.axis_size(rules.heads), 1) == 0:
+        k, v = rules.act_bthd(k), rules.act_bthd(v)
+    impl = rules.attn_impl if rules is not None else "ref"
+    out = attention(q, k, v, impl=impl, causal=True,
+                    window=cfg.sliding_window,
+                    q_positions=pos1d, k_positions=pos1d,
+                    unroll=(rules.scan_unroll if rules else False))
+    out = out.reshape(B, S, H * hd) @ lp["wo"]
+    if rules is not None:
+        out = rules.act_btd(out)
+    return x + out
+
+
+def _mlp_block(x, lp, cfg: ModelConfig, rules: Optional[Rules]):
+    if cfg.moe is None and cfg.d_ff > 0 and rules is not None \
+            and rules.manual_tp and rules.ff == "model" \
+            and rules.has_axis("model") \
+            and cfg.d_ff % rules.axis_size("model") == 0:
+        return _mlp_manual(x, lp, cfg, rules), jnp.zeros((), jnp.float32)
+    h = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.moe is not None:
+        mp = {"router": lp["router"], "w_gate": lp["moe_gate"],
+              "w_up": lp["moe_up"], "w_down": lp["moe_down"]}
+        out, aux = moe_mod.moe_block(h, mp, cfg, rules)
+        if cfg.d_ff > 0:  # dense + MoE both present (not used by our cfgs)
+            out = out + swiglu(h, lp["w_gate"], lp["w_up"], lp["w_down"], rules)
+    else:
+        out = swiglu(h, lp["w_gate"], lp["w_up"], lp["w_down"], rules)
+    return x + out, aux
+
+
+def _remat(fn, rules: Optional[Rules]):
+    policy = rules.remat if rules is not None else "none"
+    if policy == "none":
+        return fn
+    if policy == "full":
+        return jax.checkpoint(fn)
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    raise ValueError(policy)
+
+
+def forward(params: Dict[str, jax.Array], tokens: jax.Array,
+            cfg: ModelConfig, rules: Optional[Rules] = None,
+            positions: Optional[jax.Array] = None,
+            embeds: Optional[jax.Array] = None,
+            last_only: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits (B, S, V), moe_aux scalar).
+
+    ``positions``: (B, S) int32, or (3, B, S) for M-RoPE.  ``embeds``
+    optionally replaces the token embedding lookup (modality stubs).
+    ``last_only`` computes logits for the final position only (serving
+    prefill: avoids materializing the (B, S, V) tensor).
+    """
+    glob, layers = _split_layers(params)
+    B, S = tokens.shape
+    if positions is None:
+        base = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        positions = (jnp.broadcast_to(base, (3, B, S))
+                     if cfg.mrope_sections is not None else base)
+    x = embeds if embeds is not None else embed_lookup(glob["embed"], tokens, rules)
+    x = x.astype(cfg.param_dtype)
+    if rules is not None:
+        x = rules.act_btd(x)
+
+    block = _remat(functools.partial(_layer_body, cfg=cfg, rules=rules),
+                   rules)
+
+    def scan_fn(carry, lp):
+        y, aux = block(carry, lp, positions)
+        return y, aux
+
+    x, auxs = lax.scan(scan_fn, x, layers,
+                       unroll=(rules.scan_unroll if rules else False))
+    if last_only:
+        x = x[:, -1:]
+    x = rms_norm(x, glob["final_norm"], cfg.norm_eps)
+    head = glob["embed"].T if cfg.tie_embeddings else glob["lm_head"]
+    logits = x @ head
+    if rules is not None:
+        logits = rules.cs(logits, rules.batch, None, rules.vocab) \
+            if last_only else rules.logits(logits)
+    return logits, auxs.sum()
+
+
+def _layer_body(x, lp, positions, cfg: ModelConfig, rules: Optional[Rules]):
+    x = _attn_block(x, lp, cfg, rules, positions)
+    x, aux = _mlp_block(x, lp, cfg, rules)
+    return x, aux
+
+
+def loss_fn(params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            rules: Optional[Rules] = None) -> Tuple[jax.Array, Dict]:
+    logits, aux = forward(params, batch["tokens"], cfg, rules,
+                          positions=batch.get("positions"),
+                          embeds=batch.get("embeds"))
+    ce = cross_entropy(logits, batch["labels"], batch.get("mask"))
+    loss = ce + AUX_COEF * aux
+    return loss, {"ce": ce, "moe_aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step): sequence-sharded KV cache (paper C7 "virtual mesh")
+# ---------------------------------------------------------------------------
+
+def _cache_len_dim(cfg: ModelConfig, max_seq: int) -> int:
+    if cfg.sliding_window is not None:
+        return min(cfg.sliding_window, max_seq)
+    return max_seq
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               filled: Optional[int] = None) -> Dict[str, jax.Array]:
+    S = _cache_len_dim(cfg, max_seq)
+    L, K, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+    filled = 0 if filled is None else filled
+    pos = jnp.where(jnp.arange(S) < filled, jnp.arange(S), -1)
+    return {
+        "k": jnp.zeros((L, batch, S, K, hd), cfg.param_dtype),
+        "v": jnp.zeros((L, batch, S, K, hd), cfg.param_dtype),
+        "pos": jnp.broadcast_to(pos[None], (batch, S)).astype(jnp.int32),
+        "len": jnp.full((batch,), filled, jnp.int32),
+    }
+
+
+def cache_specs(cfg: ModelConfig, rules: Rules) -> Dict[str, Any]:
+    kv = rules.sharding(None, rules.batch, rules.kv_seq, None, None)
+    return {"k": kv, "v": kv,
+            "pos": rules.sharding(rules.batch, rules.kv_seq),
+            "len": rules.sharding(rules.batch)}
+
+
+def decode_step(params, cache, tokens: jax.Array, cfg: ModelConfig,
+                rules: Optional[Rules] = None,
+                positions: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One serve step: append ``tokens`` (B,) to the cache, return logits.
+
+    The KV cache stays sequence-sharded; the new token's K/V are broadcast
+    (a "remote store" to the owning shard) and attention partials return via
+    psum (the reverse network).
+    """
+    glob, layers = _split_layers(params)
+    B = tokens.shape[0]
+    D, H, K, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    S_cache = cache["k"].shape[2]
+    cur_len = cache["len"]                                   # (B,)
+    if positions is None:
+        positions = cur_len.astype(jnp.int32)
+        if cfg.mrope_sections is not None:
+            positions = jnp.broadcast_to(positions[None], (3, B))
+
+    x = embed_lookup(glob["embed"], tokens[:, None], rules)  # (B,1,D)
+    x = x.astype(cfg.param_dtype)
+    slot = (cur_len % S_cache).astype(jnp.int32)             # SWA wraps
+
+    def layer(carry, xs):
+        x = carry
+        lp, k_c, v_c = xs
+        h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+        q = h @ lp["wq"]
+        k_new = h @ lp["wk"]
+        v_new = h @ lp["wv"]
+        if cfg.qkv_bias:
+            q, k_new, v_new = q + lp["bq"], k_new + lp["bk"], v_new + lp["bv"]
+        q = q.reshape(B, H, hd)
+        k_new = k_new.reshape(B, K, hd)
+        v_new = v_new.reshape(B, K, hd)
+        if cfg.mrope_sections is not None:
+            q = mrope(q[:, None], positions[:, :, None],
+                      cfg.mrope_sections, cfg.rope_theta)[:, 0]
+            k_new = mrope(k_new[:, None], positions[:, :, None],
+                          cfg.mrope_sections, cfg.rope_theta)[:, 0]
+        else:
+            q = rope(q[:, None], positions[:, None], cfg.rope_theta)[:, 0]
+            k_new = rope(k_new[:, None], positions[:, None],
+                         cfg.rope_theta)[:, 0]
+        # remote store of the new KV into the owning sequence shard
+        k_c = _scatter_kv(k_c, k_new[:, None], slot)
+        v_c = _scatter_kv(v_c, v_new[:, None], slot)
+        if rules is not None:
+            q = rules.cs(q, rules.batch, None, None)
+        # NOTE: no window mask here — a sliding-window cache is sized to the
+        # window and wraps, so residency IS the window (DESIGN.md §6).
+        out = decode_attention(rules if rules is not None else _NORULES,
+                               q, k_c, v_c, cur_len + 1, window=None)
+        out = out.reshape(B, 1, H * hd) @ lp["wo"]
+        x = x + out
+        h2 = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+        if cfg.moe is not None:
+            mp = {"router": lp["router"], "w_gate": lp["moe_gate"],
+                  "w_up": lp["moe_up"], "w_down": lp["moe_down"]}
+            # decode uses the dense-layout path (tokens replicated)
+            mo, _ = moe_mod.moe_block(h2, mp, cfg,
+                                      _decode_rules(rules))
+            x = x + mo
+        else:
+            x = x + swiglu(h2, lp["w_gate"], lp["w_up"], lp["w_down"], None)
+        return x, (k_c, v_c)
+
+    x, (k_all, v_all) = lax.scan(layer, x, (layers, cache["k"], cache["v"]),
+                                 unroll=(rules.scan_unroll if rules else False))
+    x = rms_norm(x, glob["final_norm"], cfg.norm_eps)
+    head = glob["embed"].T if cfg.tie_embeddings else glob["lm_head"]
+    logits = (x[:, 0] @ head)
+    if rules is not None:
+        logits = rules.cs(logits, rules.batch, rules.vocab)
+    new_pos = _scatter_pos(cache["pos"], cur_len, slot)
+    cache = {"k": k_all, "v": v_all, "pos": new_pos, "len": cur_len + 1}
+    return logits, cache
+
+
+class _NoRules:
+    kv_seq = None
+
+    @staticmethod
+    def has_axis(_):
+        return False
+
+
+_NORULES = _NoRules()
+
+
+def _decode_rules(rules):
+    if rules is None:
+        return None
+    return dataclasses.replace(rules, seq=None,
+                               dispatch="auto" if rules.dispatch == "xy"
+                               else rules.dispatch)
+
+
+def _scatter_kv(cache, new, slot):
+    """cache: (B, S, K, hd); new: (B, 1, K, hd); slot: (B,)."""
+    return jax.vmap(
+        lambda c, n, s: lax.dynamic_update_slice(c, n.astype(c.dtype),
+                                                 (s, 0, 0)))(cache, new, slot)
+
+
+def _scatter_pos(pos, cur_len, slot):
+    return jax.vmap(
+        lambda p, l, s: lax.dynamic_update_slice(p, l[None].astype(p.dtype),
+                                                 (s,)))(pos, cur_len, slot)

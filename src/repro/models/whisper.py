@@ -1,0 +1,294 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/audio frontend is a STUB per the assignment: ``input_specs()``
+supplies precomputed frame embeddings ``frames: (B, enc_seq, d_model)``.
+The encoder is bidirectional self-attention; the decoder adds causal
+self-attention (with the sequence-sharded KV cache at decode) and
+cross-attention into the encoder output (cross-KV precomputed once).
+
+RoPE stands in for Whisper's learned positions (noted in the config file) —
+irrelevant for systems behaviour, keeps the layer uniform with the LM stack.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.parallel.sharding import Rules
+from . import transformer as tfm
+from .attention import attention, decode_attention, repeat_kv
+from .layers import (cross_entropy, embed_lookup, init_dense, init_norm,
+                     rms_norm, rope, swiglu)
+
+__all__ = ["param_table", "init_params", "param_shapes", "param_specs",
+           "forward", "loss_fn", "init_cache", "cache_specs", "decode_step",
+           "encode"]
+
+
+def _attn_fields(prefix, L, D, H, K, hd):
+    return {
+        f"{prefix}_norm": ((L, D), (None, None)),
+        f"{prefix}_wq": ((L, D, H * hd), (None, None, "heads")),
+        f"{prefix}_wk": ((L, D, K * hd), (None, None, "kv_heads")),
+        f"{prefix}_wv": ((L, D, K * hd), (None, None, "kv_heads")),
+        f"{prefix}_wo": ((L, H * hd, D), (None, "heads", None)),
+    }
+
+
+def _mlp_fields(prefix, L, D, F):
+    return {
+        f"{prefix}_mlp_norm": ((L, D), (None, None)),
+        f"{prefix}_w_gate": ((L, D, F), (None, None, "ff")),
+        f"{prefix}_w_up": ((L, D, F), (None, None, "ff")),
+        f"{prefix}_w_down": ((L, F, D), (None, "ff", None)),
+    }
+
+
+def param_table(cfg: ModelConfig) -> Dict[str, Tuple[tuple, tuple]]:
+    D, hd = cfg.d_model, cfg.head_dim
+    H, K, F = cfg.num_heads, cfg.num_kv_heads, cfg.d_ff
+    Le, Ld = cfg.encdec.encoder_layers, cfg.num_layers
+    t = {
+        "embed": ((cfg.vocab_size, D), ("vocab", None)),
+        "enc_final_norm": ((D,), (None,)),
+        "final_norm": ((D,), (None,)),
+        "lm_head": ((D, cfg.vocab_size), (None, "vocab")),
+    }
+    for k, v in {**_attn_fields("enc", Le, D, H, K, hd),
+                 **_mlp_fields("enc", Le, D, F)}.items():
+        t[f"enc/{k}"] = v
+    for k, v in {**_attn_fields("self", Ld, D, H, K, hd),
+                 **_attn_fields("cross", Ld, D, H, K, hd),
+                 **_mlp_fields("dec", Ld, D, F)}.items():
+        t[f"dec/{k}"] = v
+    return t
+
+
+def param_shapes(cfg):
+    return {k: jax.ShapeDtypeStruct(s, cfg.param_dtype)
+            for k, (s, _a) in param_table(cfg).items()}
+
+
+def param_specs(cfg, rules: Rules):
+    out = {}
+    for k, (s, axes) in param_table(cfg).items():
+        resolved = [tfm._resolve_axis(cfg, rules, a, s[i]) if a else None
+                    for i, a in enumerate(axes)]
+        out[k] = rules.sharding(*resolved)
+    return out
+
+
+def init_params(cfg: ModelConfig, key):
+    table = param_table(cfg)
+    keys = jax.random.split(key, len(table))
+    out = {}
+    for (name, (shape, _a)), k in zip(sorted(table.items()), keys):
+        out[name] = init_norm(shape, cfg.param_dtype) if "norm" in name \
+            else init_dense(k, shape, cfg.param_dtype)
+    return out
+
+
+def _split(params):
+    glob = {k: v for k, v in params.items() if "/" not in k}
+    enc = {k.split("/", 1)[1]: v for k, v in params.items()
+           if k.startswith("enc/")}
+    dec = {k.split("/", 1)[1]: v for k, v in params.items()
+           if k.startswith("dec/")}
+    return glob, enc, dec
+
+
+def _sa(x, lp, prefix, cfg, rules, positions, causal, kv_x=None,
+        kv_positions=None):
+    """Self- or cross-attention block with residual."""
+    B, S, D = x.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    h = rms_norm(x, lp[f"{prefix}_norm"], cfg.norm_eps)
+    src = h if kv_x is None else kv_x
+    q = (h @ lp[f"{prefix}_wq"]).reshape(B, S, H, hd)
+    k = (src @ lp[f"{prefix}_wk"]).reshape(B, src.shape[1], K, hd)
+    v = (src @ lp[f"{prefix}_wv"]).reshape(B, src.shape[1], K, hd)
+    kp = positions if kv_positions is None else kv_positions
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, kp, cfg.rope_theta)
+    if rules is None or not rules.gqa_grouped:
+        k = repeat_kv(k, H // K)
+        v = repeat_kv(v, H // K)
+    impl = rules.attn_impl if rules is not None else "ref"
+    out = attention(q, k, v, impl=impl, causal=causal,
+                    q_positions=positions, k_positions=kp,
+                    unroll=(rules.scan_unroll if rules else False))
+    out = out.reshape(B, S, H * hd) @ lp[f"{prefix}_wo"]
+    if rules is not None:
+        out = rules.act_btd(out)
+    return x + out
+
+
+def _mlp(x, lp, prefix, cfg, rules):
+    h = rms_norm(x, lp[f"{prefix}_mlp_norm"], cfg.norm_eps)
+    return x + swiglu(h, lp[f"{prefix}_w_gate"], lp[f"{prefix}_w_up"],
+                      lp[f"{prefix}_w_down"], rules)
+
+
+def encode(params, frames, cfg: ModelConfig, rules: Optional[Rules] = None):
+    """frames: (B, enc_seq, D) stubbed frontend embeddings -> encoder out."""
+    glob, enc, _dec = _split(params)
+    B, S, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = frames.astype(cfg.param_dtype)
+    if rules is not None:
+        x = rules.act_btd(x)
+
+    def body(x, lp):
+        x = _sa(x, lp, "enc", cfg, rules, positions, causal=False)
+        return _mlp(x, lp, "enc", cfg, rules)
+
+    if rules is not None and rules.remat in ("full", "dots"):
+        body = jax.checkpoint(body)
+    x, _ = lax.scan(lambda c, lp: (body(c, lp), None), x, enc,
+                    unroll=(rules.scan_unroll if rules else False))
+    return rms_norm(x, glob["enc_final_norm"], cfg.norm_eps)
+
+
+def forward(params, tokens, cfg: ModelConfig, rules: Optional[Rules] = None,
+            positions=None, embeds=None, frames=None, last_only: bool = False):
+    """Teacher-forced decoder pass.  ``frames`` (B, enc_seq, D) required
+    (or pass ``embeds`` to stand in for encoder output directly)."""
+    glob, _enc, dec = _split(params)
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    enc_out = embeds if embeds is not None else \
+        encode(params, frames, cfg, rules)
+    enc_pos = jnp.broadcast_to(
+        jnp.arange(enc_out.shape[1], dtype=jnp.int32), (B, enc_out.shape[1]))
+    x = embed_lookup(glob["embed"], tokens, rules).astype(cfg.param_dtype)
+    if rules is not None:
+        x = rules.act_btd(x)
+
+    def body(x, lp):
+        x = _sa(x, lp, "self", cfg, rules, positions, causal=True)
+        x = _sa(x, lp, "cross", cfg, rules, positions, causal=False,
+                kv_x=enc_out, kv_positions=enc_pos)
+        return _mlp(x, lp, "dec", cfg, rules)
+
+    if rules is not None and rules.remat in ("full", "dots"):
+        body = jax.checkpoint(body)
+    x, _ = lax.scan(lambda c, lp: (body(c, lp), None), x, dec,
+                    unroll=(rules.scan_unroll if rules else False))
+    if last_only:
+        x = x[:, -1:]
+    x = rms_norm(x, glob["final_norm"], cfg.norm_eps)
+    logits = x @ glob["lm_head"]
+    if rules is not None:
+        logits = rules.cs(logits, rules.batch, None, rules.vocab) \
+            if last_only else rules.logits(logits)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, batch, cfg, rules=None):
+    logits, _ = forward(params, batch["tokens"], cfg, rules,
+                        frames=batch["frames"])
+    ce = cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return ce, {"ce": ce}
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               filled: Optional[int] = None, enc_out=None,
+               params=None, rules=None):
+    """Self-attention KV cache + precomputed cross-attention KV."""
+    L, K, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+    # pad the cross-KV sequence so it can shard over the model axis
+    Se = -(-cfg.encdec.encoder_seq // 16) * 16
+    filled = filled or 0
+    cache = {
+        "k": jnp.zeros((L, batch, max_seq, K, hd), cfg.param_dtype),
+        "v": jnp.zeros((L, batch, max_seq, K, hd), cfg.param_dtype),
+        "xk": jnp.zeros((L, batch, Se, K, hd), cfg.param_dtype),
+        "xv": jnp.zeros((L, batch, Se, K, hd), cfg.param_dtype),
+        "len": jnp.full((batch,), filled, jnp.int32),
+    }
+    if enc_out is not None and params is not None:
+        _g, _e, dec = _split(params)
+        B, Se_, _ = enc_out.shape
+        ep = jnp.broadcast_to(jnp.arange(Se_, dtype=jnp.int32), (B, Se_))
+
+        def one(lp):
+            xk = rope((enc_out @ lp["cross_wk"]).reshape(B, Se_, K, hd), ep,
+                      cfg.rope_theta)
+            xv = (enc_out @ lp["cross_wv"]).reshape(B, Se_, K, hd)
+            return xk, xv
+
+        xk, xv = jax.vmap(one)(dec)
+        pad = Se - Se_
+        cache["xk"] = jnp.pad(xk, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        cache["xv"] = jnp.pad(xv, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    return cache
+
+
+def cache_specs(cfg: ModelConfig, rules: Rules):
+    kv = rules.sharding(None, rules.batch, rules.kv_seq, None, None)
+    return {"k": kv, "v": kv, "xk": kv, "xv": kv,
+            "len": rules.sharding(rules.batch)}
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig,
+                rules: Optional[Rules] = None, positions=None):
+    glob, _enc, dec = _split(params)
+    B = tokens.shape[0]
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    cur_len = cache["len"]
+    pos = cur_len.astype(jnp.int32)
+    S_cache = cache["k"].shape[2]
+    slot = (cur_len % S_cache).astype(jnp.int32)
+    Se = cache["xk"].shape[2]
+    x = embed_lookup(glob["embed"], tokens[:, None], rules)[:, 0]
+    x = x.astype(cfg.param_dtype)
+
+    def layer(carry, xs):
+        x = carry
+        lp, k_c, v_c, xk, xv = xs
+        # --- causal self-attention against the sharded cache -------------
+        h = rms_norm(x, lp["self_norm"], cfg.norm_eps)
+        q = rope(((h @ lp["self_wq"]).reshape(B, H, hd))[:, None],
+                 pos[:, None], cfg.rope_theta)[:, 0]
+        k_new = rope(((h @ lp["self_wk"]).reshape(B, K, hd))[:, None],
+                     pos[:, None], cfg.rope_theta)[:, 0]
+        v_new = (h @ lp["self_wv"]).reshape(B, K, hd)
+        k_c = tfm._scatter_kv(k_c, k_new[:, None], slot)
+        v_c = tfm._scatter_kv(v_c, v_new[:, None], slot)
+        att = decode_attention(rules if rules is not None else tfm._NORULES,
+                               q, k_c, v_c, cur_len + 1, window=None)
+        x = x + att.reshape(B, H * hd) @ lp["self_wo"]
+        # --- cross-attention against precomputed encoder KV --------------
+        h = rms_norm(x, lp["cross_norm"], cfg.norm_eps)
+        qx = rope(((h @ lp["cross_wq"]).reshape(B, H, hd))[:, None],
+                  pos[:, None], cfg.rope_theta)[:, 0]
+        # mask to the true encoder length (the cross-KV tail is padding)
+        full = jnp.full((B,), cfg.encdec.encoder_seq, jnp.int32)
+        attx = decode_attention(rules if rules is not None else tfm._NORULES,
+                                qx, xk, xv, full, window=None)
+        x = x + attx.reshape(B, H * hd) @ lp["cross_wo"]
+        # --- MLP ----------------------------------------------------------
+        h = rms_norm(x, lp["dec_mlp_norm"], cfg.norm_eps)
+        x = x + swiglu(h[:, None], lp["dec_w_gate"], lp["dec_w_up"],
+                       lp["dec_w_down"], None)[:, 0]
+        return x, (k_c, v_c)
+
+    x, (k_all, v_all) = lax.scan(
+        layer, x, (dec, cache["k"], cache["v"], cache["xk"], cache["xv"]),
+        unroll=(rules.scan_unroll if rules else False))
+    x = rms_norm(x, glob["final_norm"], cfg.norm_eps)
+    logits = x @ glob["lm_head"]
+    if rules is not None:
+        logits = rules.cs(logits, rules.batch, rules.vocab)
+    return logits, {"k": k_all, "v": v_all, "xk": cache["xk"],
+                    "xv": cache["xv"], "len": cur_len + 1}

@@ -1,0 +1,9 @@
+from .adamw import (OptConfig, apply, clip_by_global_norm, init, no_decay,
+                    schedule, state_shapes, state_specs)
+from .compress import (compress_decompress, cross_pod_psum, dequantize_int8,
+                       init_error_state, quantize_int8)
+
+__all__ = ["OptConfig", "apply", "clip_by_global_norm", "init", "no_decay",
+           "schedule", "state_shapes", "state_specs", "compress_decompress",
+           "cross_pod_psum", "dequantize_int8", "init_error_state",
+           "quantize_int8"]

@@ -1,0 +1,181 @@
+"""AdamW with ZeRO-1 sharded optimizer state.
+
+The optimizer is functional: ``init`` builds the state pytree, ``apply``
+consumes gradients and returns (new_params, new_state).  States carry an
+fp32 master copy of the parameters (bf16 training) plus Adam ``m``/``v``.
+
+ZeRO-1 maps onto the paper's "virtual mesh" idea (C7): the optimizer state
+is a big memory that no single tile can hold, so it is banked across the
+``zero1`` (= ``data``) axis — each data-parallel rank owns a slab.  In
+GSPMD terms we express the banking as NamedShardings on the state
+(:func:`state_specs`); XLA then inserts the reduce-scatter (grads -> owning
+bank) and all-gather (updated master -> replicated bf16 params), which is
+exactly the ZeRO-1 communication schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import Rules
+
+__all__ = ["OptConfig", "init", "apply", "state_specs", "state_shapes",
+           "clip_by_global_norm", "no_decay"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr_peak: float = 3e-4
+    lr_min: float = 3e-5
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def no_decay(name: str) -> bool:
+    """Norm scales / biases / SSM scalars are excluded from weight decay."""
+    leaf = name.rsplit("/", 1)[-1]
+    return ("norm" in leaf or leaf.startswith("b")
+            or leaf in ("A_log", "dt_bias", "D_skip", "conv_b"))
+
+
+def schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup then cosine decay to ``lr_min``."""
+    step = step.astype(jnp.float32)
+    warm = cfg.lr_peak * step / max(cfg.warmup_steps, 1)
+    t = (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1)
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = cfg.lr_min + 0.5 * (cfg.lr_peak - cfg.lr_min) * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+# ---------------------------------------------------------------------------
+# state
+# ---------------------------------------------------------------------------
+
+def init(params: Dict[str, jax.Array]) -> Dict[str, Any]:
+    f32 = lambda p: p.astype(jnp.float32)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "master": jax.tree.map(f32, params),
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def state_shapes(param_shapes: Dict[str, jax.ShapeDtypeStruct]) -> Dict[str, Any]:
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return {
+        "master": jax.tree.map(f32, param_shapes),
+        "m": jax.tree.map(f32, param_shapes),
+        "v": jax.tree.map(f32, param_shapes),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def _zero1_spec(spec, shape: tuple, rules: Rules):
+    """Extend a param's PartitionSpec with the zero1 axis on the largest
+    still-shardable dim (the ZeRO-1 bank assignment)."""
+    z = rules._clean(rules.zero1)
+    if z is None:
+        return spec
+    z_names = (z,) if isinstance(z, str) else tuple(z)
+    z_size = rules.axis_size(z)
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    used = set()
+    for e in entries:
+        for n in ((e,) if isinstance(e, str) else (e or ())):
+            used.add(n)
+    if any(n in used for n in z_names):
+        return spec
+    best, best_len = -1, 0
+    for d, e in enumerate(entries):
+        here = rules.axis_size(e) if e else 1
+        if shape[d] % (here * z_size) == 0:
+            eff = shape[d] // here
+            if eff > best_len:
+                best, best_len = d, eff
+    if best < 0:
+        return spec
+    e = entries[best]
+    if e is None:
+        entries[best] = z if isinstance(z, str) else z_names
+    else:
+        prev = (e,) if isinstance(e, str) else tuple(e)
+        entries[best] = prev + z_names
+    return jax.sharding.PartitionSpec(*entries)
+
+
+def state_specs(param_specs: Dict[str, Any],
+                param_shapes: Dict[str, jax.ShapeDtypeStruct],
+                rules: Rules) -> Dict[str, Any]:
+    """NamedShardings for the optimizer state: param spec + zero1 banking."""
+    def one(ps, sds):
+        spec = ps.spec if hasattr(ps, "spec") else ps
+        return rules.mesh, _zero1_spec(spec, sds.shape, rules)
+
+    banked = {k: jax.sharding.NamedSharding(*one(param_specs[k], param_shapes[k]))
+              for k in param_shapes}
+    return {"master": banked, "m": banked, "v": banked,
+            "step": jax.sharding.NamedSharding(
+                rules.mesh, jax.sharding.PartitionSpec())}
+
+
+# ---------------------------------------------------------------------------
+# update
+# ---------------------------------------------------------------------------
+
+def clip_by_global_norm(grads: Dict[str, jax.Array], max_norm: float
+                        ) -> Tuple[Dict[str, jax.Array], jax.Array]:
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def apply(cfg: OptConfig, params: Dict[str, jax.Array],
+          grads: Dict[str, jax.Array], state: Dict[str, Any],
+          state_shardings: Optional[Dict[str, Any]] = None
+          ) -> Tuple[Dict[str, jax.Array], Dict[str, Any], Dict[str, jax.Array]]:
+    """One AdamW step.  Returns (params, state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(name, g, master, m, v):
+        g = g.astype(jnp.float32)
+        if state_shardings is not None:
+            # ZeRO-1: push the gradient into the bank layout -> GSPMD emits
+            # a reduce-scatter instead of a full all-reduce (paper C7).
+            sh = state_shardings["m"][name]
+            g = jax.lax.with_sharding_constraint(g, sh)
+            master = jax.lax.with_sharding_constraint(master, sh)
+            m = jax.lax.with_sharding_constraint(m, sh)
+            v = jax.lax.with_sharding_constraint(v, sh)
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        upd = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        if cfg.weight_decay and not no_decay(name):
+            upd = upd + cfg.weight_decay * master
+        master = master - lr * upd
+        return master, m, v
+
+    new_master, new_m, new_v = {}, {}, {}
+    for name in params:
+        new_master[name], new_m[name], new_v[name] = upd(
+            name, grads[name], state["master"][name],
+            state["m"][name], state["v"][name])
+    new_params = {k: new_master[k].astype(params[k].dtype) for k in params}
+    state = {"master": new_master, "m": new_m, "v": new_v, "step": step}
+    return new_params, state, {"grad_norm": gnorm, "lr": lr}

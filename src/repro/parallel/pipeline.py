@@ -1,0 +1,107 @@
+"""Pipeline parallelism as a chain of token-queue channels (paper C6).
+
+The paper's Option-2 congestion rule — *"the first node can have an
+outstanding message counter that causes it to stall when the number of
+outstanding messages equals the size of the second node's input FIFO"* —
+is exactly a pipeline schedule: stages are mesh neighbors along one axis,
+activations are the forward-path packets (one ``ppermute`` hop, the
+``channel_send`` primitive), and the steady-state in-flight microbatch
+count equals the channel depth (the BDP credit rule, C3).
+
+:func:`pipeline_apply` is the SPMD rotating-buffer schedule: every device
+executes its stage's layers each tick; activations rotate one hop along
+``stage_axis``; microbatch ``m`` is injected at tick ``m`` and its output
+surfaces at tick ``m + n_stages - 1``.  A full fwd+bwd through ``jax.grad``
+yields the reverse (1B) wave automatically — the bwd ticks traverse the
+reverse path like the paper's response network.
+
+Bubble fraction = (S-1)/(T+S-1), the GPipe bound; the credit counter keeps
+in-flight ≤ depth so no stage's input FIFO can overflow (deadlock-free by
+C2's sink argument).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax, shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core.routing import shift
+
+__all__ = ["pipeline_apply", "stage_params_spec", "bubble_fraction"]
+
+
+def bubble_fraction(n_micro: int, n_stages: int) -> float:
+    return (n_stages - 1) / (n_micro + n_stages - 1)
+
+
+def stage_params_spec(stage_axis: str):
+    """Layer-stacked params (L, ...) are sharded over stages on dim 0."""
+    return P(stage_axis)
+
+
+def pipeline_apply(body: Callable, params_stacked, x_micro: jax.Array,
+                   mesh, stage_axis: str = "model",
+                   batch_axis=None) -> jax.Array:
+    """Run ``body`` as a pipeline over ``stage_axis``.
+
+    body:          (stage_layer_params, activation) -> activation; the
+                   per-stage compute (its params carry a leading dim of
+                   layers-per-stage and are scanned inside).
+    params_stacked: pytree with leading dim L = n_stages * layers_per_stage,
+                   sharded P(stage_axis) on dim 0.
+    x_micro:       (n_micro, mb, S, D) microbatched input, replicated over
+                   ``stage_axis`` (sharded over ``batch_axis`` on dim 1).
+
+    Returns (n_micro, mb, S, D) outputs (what the LAST stage produced).
+    """
+    n_stages = mesh.shape[stage_axis]
+
+    def island(params_l, xm):
+        # (S, L/S, ...) sharded on dim 0 -> local (1, L/S, ...): drop it
+        params_l = jax.tree.map(lambda p: p[0], params_l)
+        # activations become stage-varying the moment stages diverge
+        xm = lax.pcast(xm, (stage_axis,), to="varying")
+        sid = lax.axis_index(stage_axis)
+        n_micro = xm.shape[0]
+        ticks = n_micro + n_stages - 1
+        state = jnp.zeros_like(xm[0])                  # stage input buffer
+        outs = jnp.zeros_like(xm)
+
+        def tick(carry, t):
+            state, outs = carry
+            # stage 0 dequeues the next microbatch from the host queue
+            mb_in = xm[jnp.minimum(t, n_micro - 1)]
+            state = jnp.where(sid == 0, mb_in, state)
+            y = body(params_l, state)
+            # last stage commits its result for microbatch t-(S-1)
+            slot = jnp.clip(t - (n_stages - 1), 0, n_micro - 1)
+            emit = (sid == n_stages - 1) & (t >= n_stages - 1)
+            outs = lax.cond(
+                emit,
+                lambda o: lax.dynamic_update_index_in_dim(o, y, slot, 0),
+                lambda o: o, outs)
+            # forward-path hop: one ppermute to the next stage (C6 channel)
+            state = shift(y, stage_axis, +1)
+            return (state, outs), None
+
+        (state, outs), _ = lax.scan(tick, (state, outs),
+                                    jnp.arange(ticks))
+        # broadcast the last stage's outputs to every stage (reverse path
+        # is a sink: psum over the ring is always absorbable, C2)
+        outs = lax.psum(
+            jnp.where(sid == n_stages - 1, outs, jnp.zeros_like(outs)),
+            stage_axis)
+        return outs
+
+    in_specs = (jax.tree.map(lambda _: P(stage_axis), params_stacked),
+                P(None, batch_axis))
+    return shard_map(island, mesh=mesh,
+                     in_specs=in_specs,
+                     out_specs=P(None, batch_axis),
+                     axis_names={stage_axis} | (
+                         {batch_axis} if isinstance(batch_axis, str)
+                         else set(batch_axis or ())))(params_stacked, x_micro)

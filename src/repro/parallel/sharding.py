@@ -1,0 +1,165 @@
+"""Logical-axis sharding rules (DP / TP / EP / SP / ZeRO-1).
+
+The model code never names mesh axes directly; it asks :class:`Rules` to
+constrain activations by *logical* axes.  One Rules object describes one
+parallelism strategy; the dry-run and the perf hillclimb swap strategies by
+swapping Rules (see launch/dryrun.py ``--strategy``).
+
+Mapping to the paper: rows of the device grid (the ``data`` axis) are the
+mesh's Y dimension, columns (``model``) the X dimension; the ``pod`` axis is
+the off-chip link to the next pod ("the mesh extends over off-chip links",
+BSG Ten).  Weight-stationary TP traffic flows along rows, gradient reduction
+along columns then pods — dimension-ordered, exactly like the XY router.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[str, Tuple[str, ...], None]
+
+__all__ = ["Rules", "make_rules"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    mesh: Mesh
+    batch: Axis = ("pod", "data")   # DP over pods and data rows
+    seq: Axis = "model"             # SP: activation sequence sharding
+    heads: Axis = "model"           # TP: attention heads
+    ff: Axis = "model"              # TP: FFN hidden
+    vocab: Axis = "model"           # "virtual mesh" embedding shard (C7)
+    experts: Axis = "model"         # EP: MoE expert homes (sub-mesh, C7)
+    kv_seq: Axis = "model"          # decode: KV cache sequence shard (C7)
+    zero1: Axis = "data"            # optimizer-state shard axis (ZeRO-1)
+    # how the MoE dispatch travels: "xy" = dimension-ordered two-phase
+    # (paper C4), "flat" = single-axis all-to-all, "tp" = no dispatch
+    # (experts tensor-parallel over ff)
+    dispatch: str = "xy"
+    # remat policy for the scanned layer: "full", "dots", "none"
+    remat: str = "full"
+    # attention implementation: "chunked" (memory-efficient jnp),
+    # "ref" (materialized scores), "flash" (Pallas kernel),
+    # "noattn" (cost-isolation stub, launch/costing.py only)
+    attn_impl: str = "chunked"
+    # SSD implementation: "chunked" | "kernel" | "skip" (cost isolation)
+    ssd_impl: str = "chunked"
+    # unroll lax.scan over layers (used by the dry-run cost variants:
+    # cost_analysis counts a while-loop body once, so the roofline
+    # extrapolates from unrolled 1- and 2-trip compiles)
+    scan_unroll: bool = False
+    # GQA: keep k/v at K heads inside attention (ablation; default repeats
+    # KV to H heads so attention is fully head-parallel — see §Perf/qwen2)
+    gqa_grouped: bool = False
+    # Megatron TP as an explicit shard_map island (gather-once ->
+    # local-heads -> reduce-scatter).  GSPMD's auto placement round-trips
+    # q/k/v through per-tensor all-to-alls instead (§Perf/qwen2); manual
+    # wins by ~8x on collective bytes.  Auto-falls-back per arch when
+    # heads don't divide TP.
+    manual_tp: bool = True
+    # FSDP / ZeRO-3: additionally bank params+grads over the zero1 (data)
+    # axis — weights all-gather per layer, grads reduce-scatter.  Required
+    # to FIT the 72B train cells (TP-16 alone leaves params+grads
+    # replicated over data: 8.5+8.5 GiB/chip; see EXPERIMENTS.md §Dry-run)
+    fsdp: bool = False
+
+    # ------------------------------------------------------------------
+    def has_axis(self, name: str) -> bool:
+        return name in self.mesh.axis_names
+
+    def axis_size(self, axis: Axis) -> int:
+        if axis is None:
+            return 1
+        names = (axis,) if isinstance(axis, str) else axis
+        n = 1
+        for a in names:
+            if a in self.mesh.axis_names:
+                n *= self.mesh.shape[a]
+        return n
+
+    def _clean(self, axis: Axis) -> Axis:
+        """Drop axes this mesh doesn't have (e.g. 'pod' on a single pod)."""
+        if axis is None or isinstance(axis, str):
+            return axis if (axis is None or self.has_axis(axis)) else None
+        kept = tuple(a for a in axis if self.has_axis(a))
+        return kept if kept else None
+
+    def spec(self, *axes: Axis) -> P:
+        return P(*[self._clean(a) for a in axes])
+
+    def sharding(self, *axes: Axis) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(*axes))
+
+    def overlaps(self, a: Axis, b: Axis) -> bool:
+        names = lambda ax: set((ax,) if isinstance(ax, str) else (ax or ()))
+        return bool(names(self._clean(a)) & names(self._clean(b)))
+
+    def cs(self, x: jax.Array, *axes: Axis) -> jax.Array:
+        """with_sharding_constraint by logical axes (pads missing dims).
+
+        Safety rails (both required by jax NamedSharding rules):
+        * axes that do not evenly divide the dim are dropped (e.g. whisper's
+          vocab=51866 cannot shard 16 ways -> logits replicated on vocab);
+        * a mesh axis may appear once per spec — later duplicates drop.
+        """
+        axes = axes + (None,) * (x.ndim - len(axes))
+        used: set = set()
+        safe = []
+        for d, a in enumerate(axes):
+            a = self._clean(a)
+            if a is not None:
+                names = (a,) if isinstance(a, str) else tuple(a)
+                if any(n in used for n in names) or \
+                        x.shape[d] % max(self.axis_size(a), 1) != 0:
+                    a = None
+                else:
+                    used.update(names)
+            safe.append(a)
+        return jax.lax.with_sharding_constraint(x, self.sharding(*safe))
+
+    # common activation layouts ----------------------------------------
+    def act_btd(self, x):   # (batch, seq, d_model)
+        return self.cs(x, self.batch, self.seq, None)
+
+    def act_bthd(self, x):  # (batch, seq, heads, head_dim)
+        # inside attention, head (TP) sharding wins over SP on the same axis
+        seq = None if self.overlaps(self.seq, self.heads) else self.seq
+        return self.cs(x, self.batch, seq, self.heads, None)
+
+    def act_btf(self, x):   # (batch, seq, ff)
+        seq = None if self.overlaps(self.seq, self.ff) else self.seq
+        return self.cs(x, self.batch, seq, self.ff)
+
+    def logits(self, x):    # (batch, seq, vocab)
+        seq = None if self.overlaps(self.seq, self.vocab) else self.seq
+        return self.cs(x, self.batch, seq, self.vocab)
+
+
+def make_rules(mesh: Mesh, strategy: str = "baseline", **overrides) -> Rules:
+    """Named strategies used by the dry-run/hillclimb.
+
+    baseline    — production defaults (TP rows, DP columns+pods, Megatron
+                  SP for activations, xy MoE dispatch, full remat,
+                  chunked attention)
+    no_sp       — activations replicated over seq (ablation; higher temp)
+    flat_a2a    — MoE dispatch as a single flat all-to-all (ablation)
+    no_zero1    — optimizer states replicated (ablation)
+    """
+    base = dict()
+    if strategy == "baseline":
+        pass
+    elif strategy == "fsdp":
+        base["fsdp"] = True
+    elif strategy == "no_sp":
+        base["seq"] = None
+    elif strategy == "flat_a2a":
+        base["dispatch"] = "flat"
+    elif strategy == "no_zero1":
+        base["zero1"] = None
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}")
+    base.update(overrides)
+    return Rules(mesh=mesh, **base)

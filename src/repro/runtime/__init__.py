@@ -1,0 +1,3 @@
+from .trainer import FaultInjector, Trainer, TrainerConfig
+
+__all__ = ["FaultInjector", "Trainer", "TrainerConfig"]

@@ -1,0 +1,210 @@
+"""Fault-tolerant training runtime.
+
+The loop composes the framework's substrate exactly the way a pod-scale
+deployment would, with the host-side control plane made explicit:
+
+* **checkpoint/restart** — resume from the newest committed checkpoint;
+  async saves every ``ckpt_every`` steps (credit-bounded, paper C3); a
+  final fence guarantees durability before exit.
+* **step retry** — a transient step failure (preempted worker, flaky
+  link) is retried from the last known-good state; repeated failures
+  trigger restore-from-checkpoint; a retry budget bounds the loop.
+* **straggler detection** — per-step wall time against a rolling median
+  (the paper's congestion signal: "the delay at router will increase");
+  a straggling step beyond ``straggler_factor``× median is logged and
+  counted — on a real pod this is where the scheduler would evict the
+  slow host.
+* **elastic re-shard** — :meth:`Trainer.reshard` moves params+optimizer
+  onto a different (smaller/larger) mesh mid-run: same global arrays,
+  new NamedShardings, recompiled step.  This is scale-down-on-failure /
+  scale-up-on-recovery with no restart from disk.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, Iterator, List, Optional
+
+import jax
+import numpy as np
+
+from repro import optim
+from repro.checkpoint import AsyncCheckpointer, latest_step, restore
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch import step as step_mod
+from repro.models.api import get_model
+
+__all__ = ["TrainerConfig", "Trainer", "FaultInjector"]
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str = "checkpoints"
+    ckpt_credits: int = 2
+    max_retries_per_step: int = 2
+    max_total_retries: int = 10
+    straggler_factor: float = 3.0
+    log_every: int = 10
+
+
+class FaultInjector:
+    """Deterministic fault schedule for tests/examples: raises
+    ``RuntimeError`` the first ``times`` times ``step`` is executed."""
+
+    def __init__(self, fail_at: Dict[int, int]):
+        self.fail_at = dict(fail_at)
+
+    def maybe_fail(self, step: int):
+        n = self.fail_at.get(step, 0)
+        if n > 0:
+            self.fail_at[step] = n - 1
+            raise RuntimeError(f"injected fault at step {step}")
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, shape: ShapeConfig, mesh,
+                 opt_cfg: Optional[optim.OptConfig] = None,
+                 tcfg: Optional[TrainerConfig] = None,
+                 strategy: str = "baseline",
+                 fault_injector: Optional[FaultInjector] = None,
+                 **rule_overrides):
+        self.cfg, self.shape = cfg, shape
+        self.tcfg = tcfg or TrainerConfig()
+        self.opt_cfg = opt_cfg or optim.OptConfig()
+        self.strategy, self.rule_overrides = strategy, rule_overrides
+        self.fault_injector = fault_injector
+        self.events: List[Dict] = []
+        self.step_times: List[float] = []
+        self._bind_mesh(mesh)
+        self.ckpt = AsyncCheckpointer(self.tcfg.ckpt_dir,
+                                      credits=self.tcfg.ckpt_credits)
+        self.params = None
+        self.opt_state = None
+        self.step = 0
+
+    # ------------------------------------------------------------------
+    def _bind_mesh(self, mesh):
+        """(Re)build rules, shardings and the jitted step for ``mesh``."""
+        self.mesh = mesh
+        cell = step_mod.build_cell(self.cfg, self.shape, mesh,
+                                   self.strategy, self.opt_cfg,
+                                   **self.rule_overrides)
+        self.rules = cell.rules
+        self.cell = cell
+        self._jit_step = cell.jitted()
+        self._batch_sh = cell.in_shardings[2]
+
+    def init(self, seed: int = 0):
+        model = get_model(self.cfg)
+        with self.mesh:
+            # the cell's shardings are authoritative (they include e.g.
+            # the FSDP banking when strategy="fsdp")
+            p_specs = self.cell.in_shardings[0]
+            init_fn = jax.jit(model.init_params, static_argnums=0,
+                              out_shardings=p_specs)
+            self.params = init_fn(self.cfg, jax.random.key(seed))
+            self.opt_state = jax.jit(
+                optim.init, out_shardings=self.cell.in_shardings[1])(
+                self.params)
+        self.step = 0
+        return self
+
+    def resume_or_init(self, seed: int = 0):
+        last = latest_step(self.tcfg.ckpt_dir)
+        if last is None:
+            return self.init(seed)
+        model = get_model(self.cfg)
+        p_shapes = model.param_shapes(self.cfg)
+        s_shapes = optim.state_shapes(p_shapes)
+        tree, step, extra = restore(
+            self.tcfg.ckpt_dir, {"params": p_shapes, "opt": s_shapes},
+            shardings={"params": self.cell.in_shardings[0],
+                       "opt": self.cell.in_shardings[1]})
+        self.params, self.opt_state = tree["params"], tree["opt"]
+        self.step = step
+        self.events.append({"kind": "resume", "step": step})
+        return self
+
+    # ------------------------------------------------------------------
+    def reshard(self, new_mesh):
+        """Elastic re-shard: move live state onto ``new_mesh``."""
+        old_chips = self.mesh.devices.size
+        self._bind_mesh(new_mesh)
+        self.params = jax.device_put(self.params, self.cell.in_shardings[0])
+        self.opt_state = jax.device_put(self.opt_state,
+                                        self.cell.in_shardings[1])
+        self.events.append({"kind": "reshard", "step": self.step,
+                            "from_chips": old_chips,
+                            "to_chips": new_mesh.devices.size})
+        return self
+
+    # ------------------------------------------------------------------
+    def _put_batch(self, batch: Dict[str, np.ndarray]):
+        return {k: jax.device_put(v, self._batch_sh[k])
+                for k, v in batch.items()}
+
+    def run(self, batches: Iterator[Dict[str, np.ndarray]],
+            on_step: Optional[Callable[[int, Dict], None]] = None) -> Dict:
+        assert self.params is not None, "call init()/resume_or_init() first"
+        total_retries = 0
+        metrics = {}
+        while self.step < self.tcfg.total_steps:
+            batch = next(batches)
+            retries = 0
+            while True:
+                t0 = time.perf_counter()
+                try:
+                    if self.fault_injector is not None:
+                        self.fault_injector.maybe_fail(self.step)
+                    with self.mesh:
+                        new_p, new_o, metrics = self._jit_step(
+                            self.params, self.opt_state,
+                            self._put_batch(batch))
+                    jax.block_until_ready(metrics["loss"])
+                    self.params, self.opt_state = new_p, new_o
+                    break
+                except Exception as e:
+                    retries += 1
+                    total_retries += 1
+                    self.events.append({"kind": "step_failure",
+                                        "step": self.step, "error": str(e)})
+                    if total_retries > self.tcfg.max_total_retries:
+                        raise RuntimeError("retry budget exhausted") from e
+                    if retries > self.tcfg.max_retries_per_step:
+                        # fall back to last durable state
+                        self.ckpt.fence()
+                        self.resume_or_init()
+                        retries = 0
+                dt = time.perf_counter() - t0
+                self._heartbeat(dt)
+            dt = time.perf_counter() - t0
+            self._heartbeat(dt)
+            self.step += 1
+            if self.step % self.tcfg.ckpt_every == 0 or \
+                    self.step == self.tcfg.total_steps:
+                self.ckpt.submit(self.step, {"params": self.params,
+                                             "opt": self.opt_state},
+                                 extra={"loss": float(metrics["loss"])})
+            if on_step is not None:
+                on_step(self.step, metrics)
+            if self.step % self.tcfg.log_every == 0:
+                print(f"step {self.step:5d}  loss {float(metrics['loss']):.4f}"
+                      f"  ({dt*1e3:.0f} ms)", flush=True)
+        self.ckpt.fence()   # durability barrier (paper C3 fence)
+        return {k: float(v) for k, v in metrics.items()}
+
+    def _heartbeat(self, dt: float):
+        self.step_times.append(dt)
+        hist = self.step_times[-20:-1]
+        if len(hist) >= 5:
+            med = statistics.median(hist)
+            if dt > self.tcfg.straggler_factor * med:
+                self.events.append({"kind": "straggler", "step": self.step,
+                                    "dt": dt, "median": med})
+
+    def close(self):
+        self.ckpt.close()

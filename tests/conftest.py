@@ -1,0 +1,32 @@
+"""Shared fixtures.
+
+We give the test process 8 CPU devices (NOT the dry-run's 512 — that flag is
+set only inside launch/dryrun.py) so shard_map / PGAS tests exercise a real
+2x4 mesh while smoke tests still run comfortably on CPU.
+"""
+import os
+
+# Must run before jax initializes its backend; conftest import is early
+# enough as long as no test module imports jax at collection time before us.
+import jax
+
+try:  # set the device count before first backend use
+    jax.config.update("jax_num_cpu_devices", 8)
+except Exception:  # pragma: no cover - older jax fallback
+    os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def mesh2x4():
+    """A (y=2, x=4) tile grid — 8 tiles, one per CPU device."""
+    return jax.make_mesh((2, 4), ("y", "x"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+@pytest.fixture(scope="session")
+def mesh_dm():
+    """A (data=2, model=4) mesh in the production axis naming."""
+    return jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,93 @@
+"""Checkpointing: atomic save/restore, integrity, async credits."""
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {"w": jnp.asarray(rng.standard_normal((4, 8)),
+                                    dtype=jnp.float32),
+                   "b": jnp.asarray(rng.standard_normal(8),
+                                    dtype=jnp.bfloat16)},
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    tree = _tree()
+    ckpt.save(tmp_path, 7, tree, extra={"loss": 1.25})
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    got, step, extra = ckpt.restore(tmp_path, like)
+    assert step == 7 and extra["loss"] == 1.25
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), got, tree)
+
+
+def test_latest_step_ignores_tmp(tmp_path):
+    ckpt.save(tmp_path, 1, _tree())
+    ckpt.save(tmp_path, 5, _tree())
+    (tmp_path / "step_00000009.tmp").mkdir()   # crashed save
+    assert ckpt.latest_step(tmp_path) == 5
+
+
+def test_corruption_detected(tmp_path):
+    tree = _tree()
+    d = ckpt.save(tmp_path, 3, tree)
+    target = d / "params__w.npy"
+    arr = np.load(target)
+    arr[0, 0] += 1.0
+    np.save(target, arr)
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    with pytest.raises(IOError, match="crc"):
+        ckpt.restore(tmp_path, like)
+
+
+def test_missing_leaf_detected(tmp_path):
+    tree = _tree()
+    ckpt.save(tmp_path, 3, tree)
+    like = dict(tree)
+    like["extra_leaf"] = jnp.zeros(3)
+    with pytest.raises(KeyError):
+        ckpt.restore(tmp_path, like)
+
+
+def test_async_checkpointer_fence(tmp_path):
+    ac = ckpt.AsyncCheckpointer(tmp_path, credits=2)
+    for s in (10, 20, 30):
+        ac.submit(s, _tree(s))
+    ac.fence()
+    assert ckpt.latest_step(tmp_path) == 30
+    ac.close()
+
+
+def test_async_snapshot_semantics(tmp_path):
+    """The submitted tree is snapshotted at submit time; later mutation of
+    the live arrays must not leak into the checkpoint."""
+    ac = ckpt.AsyncCheckpointer(tmp_path, credits=1)
+    arr = np.ones(4, np.float32)
+    ac.submit(1, {"w": arr})
+    arr[:] = -1                      # mutate after submit
+    ac.fence()
+    got, _, _ = ckpt.restore(tmp_path, {"w": jnp.zeros(4)})
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.ones(4))
+    ac.close()
+
+
+def test_restore_with_shardings(tmp_path, mesh_dm):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    tree = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
+    ckpt.save(tmp_path, 2, tree)
+    sh = {"w": NamedSharding(mesh_dm, P("data", "model"))}
+    got, step, _ = ckpt.restore(
+        tmp_path, {"w": jax.ShapeDtypeStruct((4, 4), jnp.float32)},
+        shardings=sh)
+    assert got["w"].sharding == sh["w"]
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.asarray(tree["w"]))

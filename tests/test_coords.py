@@ -1,0 +1,77 @@
+"""PGAS addressing + XY routing geometry (paper C1/C4)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.coords import (GridSpec, decode_address, encode_address,
+                               manhattan_hops, xy_route)
+
+
+def test_address_roundtrip_basic():
+    spec = GridSpec(nx=16, ny=16, addr_width=20)
+    a = encode_address(spec, 3, 7, 0x1234)
+    assert decode_address(spec, a) == (3, 7, 0x1234)
+
+
+def test_address_fields_disjoint():
+    spec = GridSpec(nx=4, ny=4, addr_width=8)
+    # local address occupies the low addr_width bits exactly
+    a0 = encode_address(spec, 0, 0, 0)
+    a1 = encode_address(spec, 0, 0, (1 << 8) - 1)
+    assert a1 - a0 == (1 << 8) - 1
+    assert encode_address(spec, 1, 0, 0) == (1 << 8)
+
+
+def test_address_bounds_checked():
+    spec = GridSpec(nx=4, ny=4, addr_width=8)
+    with pytest.raises(ValueError):
+        encode_address(spec, 4, 0, 0)
+    with pytest.raises(ValueError):
+        encode_address(spec, 0, 0, 1 << 8)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(1, 31), st.integers(1, 31), st.integers(0, 30),
+       st.integers(0, 30), st.integers(0, (1 << 20) - 1))
+def test_address_roundtrip_property(nx, ny, x, y, local):
+    spec = GridSpec(nx=max(nx, x + 1), ny=max(ny, y + 1), addr_width=20)
+    assert decode_address(spec, encode_address(spec, x, y, local)) == (x, y, local)
+
+
+def test_tile_id_row_major():
+    spec = GridSpec(nx=4, ny=3)
+    assert spec.tile_id(0, 0) == 0
+    assert spec.tile_id(3, 0) == 3
+    assert spec.tile_id(0, 1) == 4
+    assert spec.tile_xy(7) == (3, 1)
+    assert [spec.tile_id(x, y) for x, y in spec.tiles()] == list(range(12))
+
+
+def test_xy_route_dimension_order():
+    # X first, then Y — and the route length equals the Manhattan distance.
+    path = xy_route((0, 0), (2, 2))
+    assert path == [(0, 0), (1, 0), (2, 0), (2, 1), (2, 2)]
+    assert len(path) - 1 == manhattan_hops((0, 0), (2, 2))
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.tuples(st.integers(0, 15), st.integers(0, 15)),
+       st.tuples(st.integers(0, 15), st.integers(0, 15)))
+def test_xy_route_never_turns_from_y_to_x(src, dst):
+    """The reduced-crossbar invariant: once a route moves in Y it never
+    moves in X again (N->E/W turns are structurally impossible)."""
+    path = xy_route(src, dst)
+    assert len(path) - 1 == manhattan_hops(src, dst)
+    moved_y = False
+    for (x0, y0), (x1, y1) in zip(path, path[1:]):
+        if y1 != y0:
+            moved_y = True
+        if x1 != x0:
+            assert not moved_y, f"route {path} turned from Y back to X"
+
+
+def test_bisection_links_paper_example():
+    # 8x8 mesh: 16 links cross the median counting both directions.
+    assert GridSpec(nx=8, ny=8).bisection_links("x") == 16
+    # Celerity-scale: 16-wide array -> 16 links per direction across the
+    # short cut (32 both ways), the "32 remote operations per cycle" bound.
+    assert GridSpec(nx=16, ny=31).bisection_links("y") == 32

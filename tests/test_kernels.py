@@ -1,0 +1,170 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (flash_attention_op, grouped_matmul, ref,
+                           ssd_scan_op)
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+def _tol(dtype):
+    return TOL[jnp.bfloat16 if dtype == jnp.bfloat16 else jnp.float32]
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FLASH_SHAPES = [
+    # (B, S, H, K, hd)
+    (1, 64, 2, 2, 128),    # aligned, MHA
+    (2, 96, 4, 2, 48),     # padded seq + padded hd + GQA
+    (1, 128, 8, 1, 64),    # MQA
+    (1, 300, 4, 4, 80),    # stablelm-like hd=80
+    (2, 48, 4, 2, 128),    # seq < block
+]
+
+
+@pytest.mark.parametrize("shape", FLASH_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(shape, dtype, causal):
+    B, S, H, K, hd = shape
+    ks = jax.random.split(jax.random.PRNGKey(hash(shape) % 2**31), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, K, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, K, hd), dtype)
+    out = flash_attention_op(q, k, v, causal, None, 64, 64)
+    want = ref.flash_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=causal).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_sliding_window():
+    B, S, H, K, hd = 1, 128, 2, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, K, hd))
+    v = jax.random.normal(ks[2], (B, S, K, hd))
+    out = flash_attention_op(q, k, v, True, 32, 32, 32)
+    want = ref.flash_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=True, window=32).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_grad_matches_ref_grad():
+    B, S, H, K, hd = 1, 64, 2, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, K, hd))
+    v = jax.random.normal(ks[2], (B, S, K, hd))
+
+    def loss_kernel(q, k, v):
+        return (flash_attention_op(q, k, v, True, None) ** 2).sum()
+
+    def loss_ref(q, k, v):
+        o = ref.flash_attention_ref(q.transpose(0, 2, 1, 3),
+                                    k.transpose(0, 2, 1, 3),
+                                    v.transpose(0, 2, 1, 3), causal=True)
+        return (o.transpose(0, 2, 1, 3) ** 2).sum()
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+SSD_SHAPES = [
+    # (b, s, h, p, g, n, chunk)
+    (1, 64, 2, 16, 1, 16, 16),
+    (2, 96, 4, 16, 2, 24, 32),    # padded seq, grouped B/C
+    (1, 128, 2, 64, 1, 128, 64),  # mamba2-370m-like head
+    (1, 33, 2, 8, 1, 8, 16),      # ragged seq
+]
+
+
+@pytest.mark.parametrize("shape", SSD_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan_sweep(shape, dtype):
+    b, s, h, p, g, n, chunk = shape
+    ks = jax.random.split(jax.random.PRNGKey(hash(shape) % 2**31), 5)
+    x = (jax.random.normal(ks[0], (b, s, h, p)) * 0.5).astype(dtype)
+    dt = (jax.nn.softplus(jax.random.normal(ks[1], (b, s, h))) * 0.1).astype(dtype)
+    B = (jax.random.normal(ks[2], (b, s, g, n)) * 0.5).astype(dtype)
+    C = (jax.random.normal(ks[3], (b, s, g, n)) * 0.5).astype(dtype)
+    A = -jnp.abs(jax.random.normal(ks[4], (h,)))
+    y = ssd_scan_op(x, dt, B, C, A, chunk)
+    want = ref.ssd_scan_ref(x.transpose(0, 2, 1, 3), dt.transpose(0, 2, 1),
+                            B.transpose(0, 2, 1, 3), C.transpose(0, 2, 1, 3),
+                            A).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_ssd_scan_state_continuity():
+    """The carried VMEM state must make chunked == unchunked."""
+    b, s, h, p, g, n = 1, 64, 2, 8, 1, 8
+    ks = jax.random.split(jax.random.PRNGKey(11), 5)
+    x = jax.random.normal(ks[0], (b, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h))) * 0.1
+    B = jax.random.normal(ks[2], (b, s, g, n)) * 0.5
+    C = jax.random.normal(ks[3], (b, s, g, n)) * 0.5
+    A = -jnp.abs(jax.random.normal(ks[4], (h,)))
+    y_16 = ssd_scan_op(x, dt, B, C, A, 16)
+    y_64 = ssd_scan_op(x, dt, B, C, A, 64)
+    np.testing.assert_allclose(np.asarray(y_16), np.asarray(y_64),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# grouped matmul
+# ---------------------------------------------------------------------------
+
+GMM_SHAPES = [
+    (1, 8, 16, 8), (3, 24, 40, 56), (4, 128, 128, 128), (2, 130, 257, 64),
+]
+
+
+@pytest.mark.parametrize("shape", GMM_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gmm_sweep(shape, dtype):
+    e, m, k, n = shape
+    ks = jax.random.split(jax.random.PRNGKey(hash(shape) % 2**31), 2)
+    lhs = jax.random.normal(ks[0], (e, m, k), dtype)
+    rhs = jax.random.normal(ks[1], (e, k, n), dtype)
+    out = grouped_matmul(lhs, rhs, impl="pallas")
+    want = ref.grouped_matmul_ref(lhs, rhs)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_gmm_grad_exact():
+    e, m, k, n = 2, 16, 24, 8
+    ks = jax.random.split(jax.random.PRNGKey(5), 2)
+    lhs = jax.random.normal(ks[0], (e, m, k))
+    rhs = jax.random.normal(ks[1], (e, k, n))
+
+    def f_pal(a, b):
+        return (grouped_matmul(a, b, impl="pallas") ** 2).sum()
+
+    def f_ref(a, b):
+        return (ref.grouped_matmul_ref(a, b) ** 2).sum()
+
+    gp = jax.grad(f_pal, argnums=(0, 1))(lhs, rhs)
+    gr = jax.grad(f_ref, argnums=(0, 1))(lhs, rhs)
+    for a, b in zip(gp, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)

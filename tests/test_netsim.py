@@ -1,0 +1,227 @@
+"""Cycle-level simulator vs the paper's published numbers (C9).
+
+These tests ARE the paper-claims validation: every number asserted here is
+stated in the paper text (see DESIGN.md §2).
+"""
+import numpy as np
+import pytest
+
+from repro.core.netsim import (MeshSim, NetConfig, OP_CAS, OP_LOAD, OP_STORE,
+                               unloaded_rtt)
+
+
+def _empty_prog(ny, nx, L):
+    prog = {k: np.zeros((ny, nx, L), np.int64)
+            for k in ("dst_x", "dst_y", "addr", "data", "cmp", "op", "not_before")}
+    prog["op"][:] = -1
+    return prog
+
+
+def test_paper_fig3_seven_cycle_round_trip():
+    """mesh_master_example.v: 'the delay of the first response is exactly 7
+    clock cycles', then 1/cycle pipelined: cycles 7, 8, 9."""
+    sim = MeshSim(NetConfig(nx=4, ny=4, record_log=True))
+    prog = _empty_prog(4, 4, 3)
+    sim.mem[0, 1, :3] = [0, 1, 2]
+    for i in range(3):
+        prog["op"][0, 0, i] = OP_LOAD
+        prog["dst_x"][0, 0, i] = 1
+        prog["addr"][0, 0, i] = i
+    sim.load_program(prog)
+    sim.run(40)
+    cycles = [c for (c, *_rest) in sim.log]
+    data = [d for (*_rest, d) in sim.log]
+    assert cycles == [7, 8, 9], f"paper says 7,8,9; got {cycles}"
+    assert data == [0, 1, 2]
+
+
+@pytest.mark.parametrize("hops", [0, 1, 2, 3, 5])
+def test_unloaded_rtt_formula(hops):
+    """Each FIFO crossing adds one cycle (Fig. 3): RTT = 2*hops + 5."""
+    nx = max(hops + 1, 2)
+    sim = MeshSim(NetConfig(nx=nx, ny=2))
+    prog = _empty_prog(2, nx, 1)
+    prog["op"][0, 0, 0] = OP_LOAD
+    prog["dst_x"][0, 0, 0] = hops
+    sim.load_program(prog)
+    sim.run(unloaded_rtt(hops) + 5)
+    assert int(sim.completed[0, 0]) == 1
+    assert int(sim.lat_sum[0, 0]) == unloaded_rtt(hops)
+
+
+def test_store_commit_and_load_back():
+    """Remote stores commit at the destination memory; a later load from a
+    third tile observes them (PGAS semantics end to end)."""
+    sim = MeshSim(NetConfig(nx=4, ny=4))
+    prog = _empty_prog(4, 4, 2)
+    # tile (0,0) stores 42 to tile (2,1) addr 5
+    prog["op"][0, 0, 0] = OP_STORE
+    prog["dst_x"][0, 0, 0] = 2
+    prog["dst_y"][0, 0, 0] = 1
+    prog["addr"][0, 0, 0] = 5
+    prog["data"][0, 0, 0] = 42
+    # tile (3,3) loads the same word later
+    prog["op"][3, 3, 0] = OP_LOAD
+    prog["dst_x"][3, 3, 0] = 2
+    prog["dst_y"][3, 3, 0] = 1
+    prog["addr"][3, 3, 0] = 5
+    prog["not_before"][3, 3, 0] = 20  # after the store surely committed
+    sim.load_program(prog)
+    sim.run_until_drained()
+    assert sim.mem[1, 2, 5] == 42
+    # the observer's registered response carried 42 (log not enabled: check
+    # via memory + completion counters)
+    assert int(sim.completed[3, 3]) == 1
+
+
+def test_point_to_point_ordering():
+    """'load or store requests received at a destination node from a
+    particular source node are committed in sequential order' — last write
+    from the same source wins."""
+    sim = MeshSim(NetConfig(nx=4, ny=2))
+    L = 8
+    prog = _empty_prog(2, 4, L)
+    for i in range(L):
+        prog["op"][0, 0, i] = OP_STORE
+        prog["dst_x"][0, 0, i] = 3
+        prog["addr"][0, 0, i] = 0
+        prog["data"][0, 0, i] = i + 1
+    sim.load_program(prog)
+    sim.run_until_drained()
+    assert sim.mem[0, 3, 0] == L  # the last store committed last
+
+
+def test_fig5_cross_destination_reordering_possible():
+    """Fig. 5: master 0 loads from a FAR slave then a NEAR slave; the near
+    response returns first — out-of-order across destinations."""
+    sim = MeshSim(NetConfig(nx=8, ny=2, record_log=True))
+    prog = _empty_prog(2, 8, 2)
+    # far load (7 hops), then near load (1 hop), issued back to back
+    prog["op"][0, 0, 0] = OP_LOAD
+    prog["dst_x"][0, 0, 0] = 7
+    prog["data"][0, 0, 0] = 0
+    prog["op"][0, 0, 1] = OP_LOAD
+    prog["dst_x"][0, 0, 1] = 1
+    sim.mem[0, 7, 0] = 111  # far tile's value
+    sim.mem[0, 1, 0] = 222  # near tile's value
+    sim.load_program(prog)
+    sim.run_until_drained()
+    returned = [d for (*_r, d) in sim.log]
+    assert returned == [222, 111], f"near response must overtake far: {returned}"
+
+
+def test_fence_drains_credits():
+    """'wait until the credit counter is back to max_out_credits_p'."""
+    cfg = NetConfig(nx=4, ny=4, max_out_credits=8)
+    sim = MeshSim(cfg)
+    prog = _empty_prog(4, 4, 6)
+    for i in range(6):
+        prog["op"][0, 0, i] = OP_STORE
+        prog["dst_x"][0, 0, i] = 3
+        prog["dst_y"][0, 0, i] = 3
+        prog["addr"][0, 0, i] = i
+        prog["data"][0, 0, i] = i
+    sim.load_program(prog)
+    # mid-flight the counter is below max
+    sim.run(8)
+    assert sim.credits[0, 0] < cfg.max_out_credits
+    sim.run_until_drained()
+    assert (sim.credits == cfg.max_out_credits).all()
+    np.testing.assert_array_equal(sim.mem[3, 3, :6], np.arange(6))
+
+
+def test_credit_limit_stalls_injection():
+    """With 1 credit the master can have only one packet in flight: issue
+    rate collapses to 1/RTT."""
+    cfg = NetConfig(nx=4, ny=2, max_out_credits=1)
+    sim = MeshSim(cfg)
+    L = 4
+    prog = _empty_prog(2, 4, L)
+    for i in range(L):
+        prog["op"][0, 0, i] = OP_STORE
+        prog["dst_x"][0, 0, i] = 1
+        prog["addr"][0, 0, i] = i
+        prog["data"][0, 0, i] = 7
+    sim.load_program(prog)
+    cycles = sim.run_until_drained()
+    # serialized: ~RTT per op instead of 1/cycle
+    assert cycles >= L * unloaded_rtt(1) - 2
+    assert sim.out_of_credit_cycles[0, 0] > 0
+
+
+def test_bdp_credits_restore_line_rate():
+    """Paper's sizing rule: credits >= BDP lets the master issue at line
+    rate (drain time ~ L + RTT, far below the 1-credit serial time)."""
+    L = 16
+    t = {}
+    for credits in (1, unloaded_rtt(1) + 1):
+        sim = MeshSim(NetConfig(nx=4, ny=2, max_out_credits=credits))
+        prog = _empty_prog(2, 4, L)
+        for i in range(L):
+            prog["op"][0, 0, i] = OP_STORE
+            prog["dst_x"][0, 0, i] = 1
+            prog["addr"][0, 0, i] = i
+        sim.load_program(prog)
+        t[credits] = sim.run_until_drained()
+    assert t[unloaded_rtt(1) + 1] <= L + 2 * unloaded_rtt(1)
+    assert t[1] > 3 * t[unloaded_rtt(1) + 1] / 2
+
+
+def test_remote_cas_mutex_single_winner():
+    """All tiles CAS the lock at (0,0); exactly one wins; the lock holds the
+    winner's id (paper C8)."""
+    nx = ny = 4
+    sim = MeshSim(NetConfig(nx=nx, ny=ny, record_log=True))
+    prog = _empty_prog(ny, nx, 1)
+    for y in range(ny):
+        for x in range(nx):
+            prog["op"][y, x, 0] = OP_CAS
+            prog["data"][y, x, 0] = y * nx + x + 1  # my id + 1
+            prog["cmp"][y, x, 0] = 0
+    sim.load_program(prog)
+    sim.run_until_drained()
+    winners = [(sy, sx) for (_c, sy, sx, op, _t, d) in sim.log
+               if op == OP_CAS and d == 0]  # observed unlocked value
+    assert len(winners) == 1
+    wy, wx = winners[0]
+    assert sim.mem[0, 0, 0] == wy * nx + wx + 1
+
+
+def test_bisection_bound_paper_example():
+    """'with 16 links crossing the bisection, only 32 remote operations can
+    be sustained per cycle' — uniform cross-median traffic on the
+    512-core array never exceeds the bound and lands in its vicinity."""
+    nx, ny = 16, 32  # 512 tiles, cut across the short dimension: 16 links/dir
+    rng = np.random.default_rng(0)
+    L = 12
+    prog = _empty_prog(ny, nx, L)
+    prog["op"][:] = OP_STORE
+    for y in range(ny):
+        oy = rng.integers(ny // 2, ny, (nx, L)) if y < ny // 2 else \
+             rng.integers(0, ny // 2, (nx, L))
+        prog["dst_y"][y] = oy
+        prog["dst_x"][y] = rng.integers(0, nx, (nx, L))
+        prog["addr"][y] = rng.integers(0, 64, (nx, L))
+    sim = MeshSim(NetConfig(nx=nx, ny=ny, max_out_credits=48))
+    sim.load_program(prog)
+    cycles = sim.run_until_drained(50000)
+    thr = nx * ny * L / cycles
+    bound = 32.0  # ops/cycle, from the paper
+    assert thr <= bound + 1e-9, f"throughput {thr:.1f} exceeds bisection bound"
+    assert thr > 0.35 * bound, f"throughput {thr:.1f} implausibly far below bound"
+
+
+def test_line_rate_single_stream():
+    """One-to-one neighbor stream sustains ~1 word/cycle (the paper's line
+    rate for remote stores)."""
+    L = 64
+    sim = MeshSim(NetConfig(nx=2, ny=1, max_out_credits=64))
+    prog = _empty_prog(1, 2, L)
+    for i in range(L):
+        prog["op"][0, 0, i] = OP_STORE
+        prog["dst_x"][0, 0, i] = 1
+        prog["addr"][0, 0, i] = i % 64
+    sim.load_program(prog)
+    cycles = sim.run_until_drained()
+    # L stores complete in ~L + RTT cycles
+    assert cycles <= L + unloaded_rtt(1) + 4

@@ -1,0 +1,118 @@
+"""Property-based invariants of the mesh simulator (hypothesis).
+
+These are the system's conservation laws, checked under randomized
+traffic — the netsim equivalents of "packets are neither lost nor
+duplicated" and "credits are conserved":
+
+* every issued transaction eventually completes (conservation);
+* credits never go negative nor exceed max_out_credits_p;
+* stores commit the last-written value per (src, dst, addr) program order;
+* the structural N->E/W turn restriction never fires (asserted inside the
+  router; any violation would abort the step).
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.netsim import MeshSim, NetConfig, OP_LOAD, OP_STORE
+
+
+def _random_prog(rng, ny, nx, L, ops=(OP_STORE, OP_LOAD)):
+    prog = {k: np.zeros((ny, nx, L), np.int64)
+            for k in ("dst_x", "dst_y", "addr", "data", "cmp", "op",
+                      "not_before")}
+    prog["op"][:] = rng.choice(ops, size=(ny, nx, L))
+    # ragged program lengths: pad tails with -1
+    lens = rng.integers(0, L + 1, size=(ny, nx))
+    tail = np.arange(L)[None, None, :] >= lens[..., None]
+    prog["op"][tail] = -1
+    prog["dst_x"][:] = rng.integers(0, nx, (ny, nx, L))
+    prog["dst_y"][:] = rng.integers(0, ny, (ny, nx, L))
+    prog["addr"][:] = rng.integers(0, 16, (ny, nx, L))
+    prog["data"][:] = rng.integers(0, 1 << 20, (ny, nx, L))
+    return prog, lens
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 4), st.integers(2, 4),
+       st.integers(1, 12), st.integers(1, 8))
+def test_all_issued_transactions_complete(seed, ny, nx, L, credits):
+    rng = np.random.default_rng(seed)
+    prog, lens = _random_prog(rng, ny, nx, L)
+    sim = MeshSim(NetConfig(nx=nx, ny=ny, mem_words=16,
+                            max_out_credits=credits))
+    sim.load_program(prog)
+    sim.run_until_drained(max_cycles=20000)
+    # conservation: one response per issued packet, no duplicates
+    assert int(sim.completed.sum()) == int(lens.sum())
+    # fence semantics: all credits returned
+    assert (sim.credits == credits).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 4))
+def test_credits_bounded_every_cycle(seed, credits):
+    rng = np.random.default_rng(seed)
+    prog, _ = _random_prog(rng, 3, 3, 6)
+    sim = MeshSim(NetConfig(nx=3, ny=3, mem_words=16,
+                            max_out_credits=credits))
+    sim.load_program(prog)
+    for _ in range(300):
+        sim.step()
+        assert (sim.credits >= 0).all(), "endpoint sent while out of credit"
+        assert (sim.credits <= credits).all(), "credit over-return"
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_same_source_store_order_is_program_order(seed):
+    """Point-to-point ordering: the LAST store in program order wins at
+    every (src, dst, addr) — for a single writer per address."""
+    rng = np.random.default_rng(seed)
+    ny = nx = 3
+    L = 6
+    # each tile writes only to ONE (dst, addr) pair -> single writer
+    prog = {k: np.zeros((ny, nx, L), np.int64)
+            for k in ("dst_x", "dst_y", "addr", "data", "cmp", "op",
+                      "not_before")}
+    prog["op"][:] = OP_STORE
+    dst_x = rng.integers(0, nx, (ny, nx))
+    dst_y = rng.integers(0, ny, (ny, nx))
+    # address = unique per source tile so writers never collide
+    addr = (np.arange(ny * nx).reshape(ny, nx)) % 16
+    for i in range(L):
+        prog["dst_x"][..., i] = dst_x
+        prog["dst_y"][..., i] = dst_y
+        prog["addr"][..., i] = addr
+        prog["data"][..., i] = rng.integers(0, 1 << 20, (ny, nx))
+    sim = MeshSim(NetConfig(nx=nx, ny=ny, mem_words=16))
+    sim.load_program(prog)
+    sim.run_until_drained(max_cycles=20000)
+    for sy in range(ny):
+        for sx in range(nx):
+            got = sim.mem[dst_y[sy, sx], dst_x[sy, sx], addr[sy, sx]]
+            assert got == prog["data"][sy, sx, L - 1], \
+                "same-source stores committed out of program order"
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 5))
+def test_throughput_monotone_in_credits(seed, hops):
+    """More credits never hurt throughput on an uncontended path (the BDP
+    law's monotonicity)."""
+    done = []
+    for credits in (1, 4, 16):
+        nx = hops + 1
+        sim = MeshSim(NetConfig(nx=nx, ny=1, max_out_credits=credits,
+                                router_fifo=max(4, credits), mem_words=16))
+        L = 300
+        prog = {k: np.zeros((1, nx, L), np.int64)
+                for k in ("dst_x", "dst_y", "addr", "data", "cmp", "op",
+                          "not_before")}
+        prog["op"][:] = -1
+        prog["op"][0, 0, :] = OP_STORE
+        prog["dst_x"][0, 0, :] = hops
+        prog["addr"][0, 0, :] = np.arange(L) % 16
+        sim.load_program(prog)
+        sim.run(250)
+        done.append(int(sim.completed[0, 0]))
+    assert done[0] <= done[1] <= done[2]

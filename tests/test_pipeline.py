@@ -1,0 +1,81 @@
+"""Pipeline parallelism via token-queue channels (paper C6)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.parallel.pipeline import bubble_fraction, pipeline_apply
+
+
+def _body(lp, x):
+    """Per-stage compute: scan this stage's layer slice."""
+    def one(h, w):
+        return jnp.tanh(h @ w), None
+    y, _ = jax.lax.scan(one, x, lp)
+    return y
+
+
+def _reference(w_all, x):
+    def one(h, w):
+        return jnp.tanh(h @ w), None
+    y, _ = jax.lax.scan(one, x, w_all)
+    return y
+
+
+@pytest.fixture
+def setup(mesh_dm):
+    rng = np.random.default_rng(0)
+    L, D = 8, 16            # 8 layers over 4 stages = 2 layers/stage
+    n_micro, mb = 6, 4
+    w = jnp.asarray(rng.standard_normal((L, D, D)) * 0.3, dtype=jnp.float32)
+    x = jnp.asarray(rng.standard_normal((n_micro, mb, D)), dtype=jnp.float32)
+    return mesh_dm, w, x
+
+
+def test_pipeline_matches_sequential(setup):
+    mesh, w, x = setup
+    n_stages = mesh.shape["model"]
+    w_staged = w.reshape(n_stages, -1, *w.shape[1:])  # (S, L/S, D, D)
+    got = pipeline_apply(_body, w_staged, x, mesh, stage_axis="model",
+                         batch_axis="data")
+    want = jax.vmap(lambda xm: _reference(w, xm))(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_pipeline_grads_flow(setup):
+    mesh, w, x = setup
+    n_stages = mesh.shape["model"]
+    w_staged = w.reshape(n_stages, -1, *w.shape[1:])
+
+    def loss(ws, xm):
+        return pipeline_apply(_body, ws, xm, mesh, stage_axis="model",
+                              batch_axis="data").sum()
+
+    def loss_ref(wf, xm):
+        return jax.vmap(lambda m: _reference(wf, m))(xm).sum()
+
+    g = jax.grad(loss)(w_staged, x).reshape(w.shape)
+    g_ref = jax.grad(loss_ref)(w, x)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_bubble_fraction():
+    assert bubble_fraction(1, 4) == pytest.approx(3 / 4)
+    assert bubble_fraction(12, 4) == pytest.approx(3 / 15)
+    assert bubble_fraction(100, 2) < 0.01
+
+
+def test_inflight_bound_is_stage_count():
+    """The schedule keeps at most n_stages microbatches in flight — the
+    token-queue depth = BDP rule (C3/C6)."""
+    # structural property of the rotating schedule: microbatch m enters at
+    # tick m and leaves at tick m + S - 1 -> in flight at tick t are the
+    # microbatches in (t - S, t] — at most S of them.
+    S = 4
+    for t in range(20):
+        inflight = [m for m in range(16) if m <= t < m + S]
+        assert len(inflight) <= S

@@ -1,0 +1,76 @@
+"""Roofline machinery: HLO collective parsing + term arithmetic."""
+import pytest
+
+from repro.configs import SHAPES, get_config
+from repro.launch import roofline as rl
+
+HLO = """
+HloModule test
+  %x = f32[1024,512]{1,0} parameter(0)
+  %ar = f32[1024,512]{1,0} all-reduce(%x), replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add
+  %ag = bf16[64,2048]{1,0} all-gather(%y), replica_groups=[2,8]<=[16], dimensions={1}
+  %rs = f32[32,128]{1,0} reduce-scatter(%z), replica_groups={{0,1,2,3}}, dimensions={0}
+  %a2a = f32[16,256]{1,0} all-to-all(%w), replica_groups={{0,1}}
+  %cp = f32[8,8]{1,0} collective-permute(%v), source_target_pairs={{0,1},{1,0}}
+  %ars = (f32[4,4]{1,0}, f32[4,4]{1,0}) all-reduce-start(%u), replica_groups={{0,1}}
+  %ard = f32[4,4]{1,0} all-reduce-done(%ars)
+"""
+
+
+def test_parse_collectives_ops_and_bytes():
+    c = rl.parse_collectives(HLO)
+    assert c["all-reduce"]["count"] == 2            # sync + start (done skipped)
+    assert c["all-reduce"]["bytes"] == 1024 * 512 * 4 + 4 * 4 * 4
+    # all-gather: result/group -> operand
+    assert c["all-gather"]["bytes"] == pytest.approx(64 * 2048 * 2 / 8)
+    # reduce-scatter: result*group
+    assert c["reduce-scatter"]["bytes"] == 32 * 128 * 4 * 4
+    assert c["all-to-all"]["bytes"] == 16 * 256 * 4
+    assert c["collective-permute"]["bytes"] == 8 * 8 * 4
+
+
+def test_parse_group_sizes():
+    assert rl._group_size("replica_groups={{0,1,2,3},{4,5,6,7}}") == 4
+    assert rl._group_size("replica_groups=[2,8]<=[16]") == 8
+    assert rl._group_size("no groups here") == 1
+
+
+def test_wire_bytes_ring_model():
+    c = rl.parse_collectives(HLO)
+    # ring all-reduce: 2(k-1)/k x operand
+    big = 1024 * 512 * 4
+    small = 4 * 4 * 4
+    assert c["all-reduce"]["wire_bytes"] == pytest.approx(
+        2 * 3 / 4 * big + 2 * 1 / 2 * small)
+
+
+def test_roofline_terms_and_bottleneck():
+    cfg = get_config("stablelm-3b")
+    shape = SHAPES["train_4k"]
+    cost = {"flops": 1e15, "bytes accessed": 1e12, "bytes adjusted": 5e11}
+    rep = rl.roofline(cfg, shape, "pod", 256, cost, {})
+    assert rep.compute_s == pytest.approx(1e15 / rl.HW.PEAK_FLOPS_BF16)
+    assert rep.memory_adj_s == pytest.approx(5e11 / rl.HW.HBM_BW)
+    assert rep.collective_s == 0.0
+    assert rep.bottleneck == "compute"
+    assert 0 < rep.useful_ratio
+    assert rep.roofline_frac == pytest.approx(1.0)  # compute-bound => at roof
+
+
+def test_model_flops_moe_uses_active():
+    moe = get_config("mixtral-8x7b")
+    t = SHAPES["train_4k"]
+    assert rl.model_flops(moe, t) == pytest.approx(
+        6.0 * moe.active_param_count() * t.global_batch * t.seq_len)
+    dense = get_config("yi-34b")
+    assert rl.model_flops(dense, t) == pytest.approx(
+        6.0 * dense.param_count() * t.global_batch * t.seq_len)
+
+
+def test_decode_prefill_flops_forward_only():
+    cfg = get_config("yi-34b")
+    p, d = SHAPES["prefill_32k"], SHAPES["decode_32k"]
+    assert rl.model_flops(cfg, p) == pytest.approx(
+        2.0 * cfg.param_count() * p.global_batch * p.seq_len)
+    assert rl.model_flops(cfg, d) == pytest.approx(
+        2.0 * cfg.param_count() * d.global_batch)

@@ -1,0 +1,115 @@
+"""XY dimension-ordered collectives vs flat references (paper C4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import lax, shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core.routing import (a2a_phase_cost, allreduce_cost, shift,
+                                xy_all_gather, xy_all_reduce,
+                                xy_all_to_all, xy_reduce_scatter)
+
+T = 8  # tiles in the 2x4 test mesh
+
+
+def _run(mesh, fn, x, in_spec, out_spec):
+    sm = shard_map(fn, mesh=mesh, in_specs=in_spec, out_specs=out_spec)
+    return np.asarray(jax.jit(sm)(x))
+
+
+def test_xy_all_to_all_matches_flat_transpose(mesh2x4):
+    """Tile t's outgoing block b must land on tile b — i.e. the combined
+    operation is the block transpose a flat all-to-all performs."""
+    data = jnp.arange(T * T * 3, dtype=jnp.float32).reshape(T, T, 3)
+
+    def f(local):  # local: (1, T, 3)
+        return xy_all_to_all(local[0], "x", "y", split_axis=0)[None]
+
+    res = _run(mesh2x4, f, data, P(("y", "x"), None, None), P(("y", "x"), None, None))
+    np.testing.assert_array_equal(res, np.transpose(np.asarray(data), (1, 0, 2)))
+
+
+def test_xy_all_to_all_nonzero_split_axis(mesh2x4):
+    data = jnp.arange(2 * T * T, dtype=jnp.int32).reshape(T, 2, T)
+
+    def f(local):
+        return xy_all_to_all(local[0], "x", "y", split_axis=1)[None]
+
+    res = _run(mesh2x4, f, data, P(("y", "x"), None, None), P(("y", "x"), None, None))
+    np.testing.assert_array_equal(res, np.transpose(np.asarray(data), (2, 1, 0)))
+
+
+def test_xy_all_to_all_multiple_blocks_per_tile(mesh2x4):
+    # 2 blocks per destination tile: split dim = 16
+    data = jnp.arange(T * 2 * T, dtype=jnp.int32).reshape(T, 2 * T)
+
+    def f(local):
+        return xy_all_to_all(local[0], "x", "y", split_axis=0)[None]
+
+    res = _run(mesh2x4, f, data, P(("y", "x"), None), P(("y", "x"), None))
+    # reference: flat all-to-all with 2-row blocks
+    ref = np.asarray(data).reshape(T, T, 2).transpose(1, 0, 2).reshape(T, 2 * T)
+    np.testing.assert_array_equal(res, ref)
+
+
+def test_xy_all_reduce_equals_psum(mesh2x4):
+    data = jnp.arange(T * 4, dtype=jnp.float32).reshape(T, 4)
+
+    def f(local):
+        return xy_all_reduce(local, "x", "y")
+
+    res = _run(mesh2x4, f, data, P(("y", "x"), None), P(("y", "x"), None))
+    np.testing.assert_allclose(res, np.broadcast_to(np.asarray(data).sum(0), (1, 4)).repeat(T, 0) / 1.0)
+
+
+def test_xy_reduce_scatter_then_gather_is_allreduce(mesh2x4):
+    data = jnp.arange(T * T * 2, dtype=jnp.float32).reshape(T, T * 2)
+
+    def f(local):
+        rs = xy_reduce_scatter(local[0], "x", "y", scatter_dim=0)
+        return xy_all_gather(rs, "x", "y", gather_dim=0)[None]
+
+    res = _run(mesh2x4, f, data, P(("y", "x"), None), P(("y", "x"), None))
+    expect = np.broadcast_to(np.asarray(data).sum(0), (T, T * 2))
+    # every tile holds the full reduced vector
+    for t in range(T):
+        np.testing.assert_allclose(res[t], expect[t % 1] if False else np.asarray(data).sum(0))
+
+
+def test_shift_is_ring_permute(mesh2x4):
+    data = jnp.arange(T, dtype=jnp.int32).reshape(T, 1)
+
+    def f(local):
+        return shift(local, "x", 1)
+
+    res = _run(mesh2x4, f, data, P(("y", "x")), P(("y", "x")))
+    # within each row of 4 tiles, values rotate by one
+    got = res.reshape(2, 4)
+    want = np.asarray(data).reshape(2, 4)
+    np.testing.assert_array_equal(got, np.roll(want, 1, axis=1))
+
+
+def test_cost_model_monotone_and_zero_for_singleton():
+    assert a2a_phase_cost(1e6, 1, 50e9) == 0.0
+    assert allreduce_cost(1e6, 1, 50e9) == 0.0
+    c4 = a2a_phase_cost(1e6, 4, 50e9)
+    c16 = a2a_phase_cost(1e6, 16, 50e9)
+    assert 0 < c4 < c16
+    r4 = allreduce_cost(1e6, 4, 50e9)
+    r16 = allreduce_cost(1e6, 16, 50e9)
+    assert 0 < r4 < r16 < 2 * 1e6 / 50e9  # bounded by 2B/links
+
+
+def test_xy_a2a_rejects_bad_split():
+    import jax
+    mesh = jax.make_mesh((2, 4), ("y", "x"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+    def f(local):
+        return xy_all_to_all(local[0], "x", "y", split_axis=0)[None]
+
+    data = jnp.zeros((T, 7))  # 7 not divisible by 8
+    with pytest.raises(ValueError):
+        jax.jit(shard_map(f, mesh=mesh, in_specs=P(("y", "x"), None),
+                          out_specs=P(("y", "x"), None))).lower(data)
