@@ -12,6 +12,7 @@ from typing import Dict, List
 
 import numpy as np
 
+from repro.compat import make_auto_mesh
 from repro.core.routing import a2a_phase_cost, allreduce_cost
 from repro.launch.mesh import HW
 
@@ -20,7 +21,7 @@ __all__ = ["bench_xy_vs_flat_a2a", "bench_hierarchical_allreduce", "run"]
 
 def _collective_count(fn, args, mesh, in_specs, out_specs, names):
     import jax
-    from jax import shard_map
+    from repro.compat import shard_map
     from repro.launch.roofline import parse_collectives
     sm = shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                    axis_names=names)
@@ -37,8 +38,7 @@ def bench_xy_vs_flat_a2a(bytes_per_dev: float = 64e6) -> Dict:
     from jax.sharding import PartitionSpec as P
     from repro.core.routing import xy_all_to_all
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_auto_mesh((2, 4), ("data", "model"))
     n = mesh.devices.size
     x = jnp.zeros((8 * n, 64))          # divisible by the 8-device group
 
@@ -71,8 +71,7 @@ def bench_hierarchical_allreduce(bytes_per_dev: float = 512e6) -> Dict:
     from jax.sharding import PartitionSpec as P
     from repro.core.routing import xy_all_reduce
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_auto_mesh((2, 4), ("data", "model"))
     x = jnp.zeros((64, 64))
     flat = _collective_count(
         lambda a: lax.psum(a, ("data", "model")),

@@ -18,8 +18,8 @@ __all__ = ["bench_train_throughput", "bench_serve_throughput", "run"]
 
 def _mesh():
     import jax
-    return jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.compat import make_auto_mesh
+    return make_auto_mesh((2, 4), ("data", "model"))
 
 
 def bench_train_throughput(steps: int = 10) -> Dict:

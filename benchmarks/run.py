@@ -12,7 +12,7 @@ import json
 import time
 from pathlib import Path
 
-SUITES = ("netsim", "collectives", "kernels", "train")
+SUITES = ("netsim", "netsim_jax", "collectives", "kernels", "train")
 
 
 def main() -> None:
@@ -23,8 +23,8 @@ def main() -> None:
 
     # the collectives/train suites exercise a 2x4 device mesh; must be set
     # before the first jax backend use
-    import jax
-    jax.config.update("jax_num_cpu_devices", 8)
+    from repro.compat import set_host_device_count
+    set_host_device_count(8)
 
     results = {}
     t0 = time.perf_counter()

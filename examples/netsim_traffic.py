@@ -1,0 +1,66 @@
+"""Quickstart: the JIT-compiled mesh simulator + traffic-pattern library.
+
+Runs every synthetic traffic pattern through the JAX simulator at
+Celerity scale (16x32 = 512 cores, far beyond what the numpy oracle can
+sweep interactively), checks one pattern cycle-for-cycle against the
+oracle on a small mesh, and sweeps the credit allowance in a single
+vmapped XLA program.
+
+  PYTHONPATH=src python examples/netsim_traffic.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.netsim import MeshSim, NetConfig
+from repro.netsim_jax import (PATTERNS, JaxMeshSim, SimConfig, init_state,
+                              load_program, make_traffic, simulate)
+
+
+def pattern_sweep_512_cores():
+    nx, ny, cycles = 16, 32, 800
+    cfg = SimConfig(nx=nx, ny=ny, max_out_credits=32)
+    print(f"== traffic patterns on the {nx}x{ny} ({nx * ny}-core) array ==")
+    for name in sorted(PATTERNS):
+        prog = load_program(make_traffic(name, nx, ny, cycles, seed=0))
+        t0 = time.perf_counter()
+        _, per = simulate(cfg, prog, init_state(cfg), cycles)
+        thr = float(np.asarray(per[cycles // 3:]).mean())
+        print(f"  {name:16s} {thr:8.2f} ops/cycle   "
+              f"({time.perf_counter() - t0:.2f}s wall)")
+
+
+def oracle_parity_check():
+    cfg = NetConfig(nx=4, ny=4)
+    entries = make_traffic("transpose", 4, 4, 8, rate=0.5)
+    oracle = MeshSim(cfg)
+    oracle.load_program({k: v.copy() for k, v in entries.items()})
+    fast = JaxMeshSim(cfg)
+    fast.load_program(entries)
+    c0, c1 = oracle.run_until_drained(), fast.run_until_drained()
+    assert c0 == c1 and np.array_equal(oracle.mem, fast.mem)
+    print(f"== oracle parity == drain cycle {c0}, memories identical")
+
+
+def vmapped_credit_sweep():
+    cfg = SimConfig(nx=9, ny=1, max_out_credits=64, router_fifo=32)
+    entries = make_traffic("neighbor", 9, 1, 600)
+    entries["op"][:] = -1
+    entries["op"][0, 0, :] = 1          # one long-haul store stream
+    entries["dst_x"][0, 0, :] = 8
+    prog = load_program(entries)
+    credits = jnp.asarray([1, 2, 4, 8, 16, 21, 32])
+    states = jax.vmap(lambda c: init_state(cfg, max_credits=c))(credits)
+    _, per = jax.vmap(lambda s: simulate(cfg, prog, s, 400))(states)
+    print("== credit sweep (one compile, 7 configs; RTT = 21 cycles) ==")
+    for c, row in zip(np.asarray(credits), np.asarray(per)):
+        print(f"  credits={int(c):3d}  throughput={row[100:].mean():.3f} "
+              f"stores/cycle")
+
+
+if __name__ == "__main__":
+    pattern_sweep_512_cores()
+    oracle_parity_check()
+    vmapped_credit_sweep()

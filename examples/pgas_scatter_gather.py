@@ -10,11 +10,13 @@ built on remote compare-and-swap.
 """
 import jax
 
-jax.config.update("jax_num_cpu_devices", 8)
+from repro.compat import set_host_device_count
+set_host_device_count(8)
 
 import jax.numpy as jnp                                        # noqa: E402
 import numpy as np                                             # noqa: E402
-from jax import lax, shard_map                                 # noqa: E402
+from jax import lax                                            # noqa: E402
+from repro.compat import make_auto_mesh, shard_map             # noqa: E402
 from jax.sharding import PartitionSpec as P                    # noqa: E402
 
 from repro.core import pgas                                    # noqa: E402
@@ -26,8 +28,7 @@ SLOTS = 4
 
 
 def main():
-    mesh = jax.make_mesh((NY, NX), ("y", "x"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_auto_mesh((NY, NX), ("y", "x"))
     mem0 = jnp.zeros((T, WORDS), jnp.float32)   # one region per tile
 
     def island(mem):

@@ -9,11 +9,13 @@ prints the bubble fraction.
 """
 import jax
 
-jax.config.update("jax_num_cpu_devices", 8)
+from repro.compat import set_host_device_count
+set_host_device_count(8)
 
 import jax.numpy as jnp                                        # noqa: E402
 import numpy as np                                             # noqa: E402
 
+from repro.compat import make_auto_mesh                        # noqa: E402
 from repro.parallel.pipeline import bubble_fraction, pipeline_apply  # noqa: E402
 
 L, D, V = 8, 64, 512
@@ -30,8 +32,7 @@ def body(lp, x):
 
 
 def main():
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_auto_mesh((2, 4), ("data", "model"))
     n_stages = mesh.shape["model"]
     rng = np.random.default_rng(0)
     w1 = jnp.asarray(rng.standard_normal((L, D, D)) * 0.1, jnp.float32)

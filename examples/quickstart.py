@@ -11,7 +11,8 @@ import tempfile
 
 import jax
 
-jax.config.update("jax_num_cpu_devices", 8)
+from repro.compat import set_host_device_count
+set_host_device_count(8)
 
 import numpy as np                                             # noqa: E402
 

@@ -13,7 +13,8 @@ import dataclasses
 
 import jax
 
-jax.config.update("jax_num_cpu_devices", 8)
+from repro.compat import set_host_device_count
+set_host_device_count(8)
 
 import numpy as np                                             # noqa: E402
 
@@ -21,6 +22,7 @@ from repro import optim                                        # noqa: E402
 from repro.configs import get_config                           # noqa: E402
 from repro.configs.base import ShapeConfig                     # noqa: E402
 from repro.data.pipeline import DataConfig, Prefetcher, batch_iterator  # noqa: E402
+from repro.compat import make_auto_device_mesh                 # noqa: E402
 from repro.launch.mesh import make_test_mesh                   # noqa: E402
 from repro.runtime import FaultInjector, Trainer, TrainerConfig  # noqa: E402
 
@@ -61,9 +63,8 @@ def main():
         trainer.run(iter(data),
                     on_step=lambda s, m: losses.append(float(m["loss"])))
         # elastic scale-down mid-run: 8 chips -> 4 chips, same run
-        small = jax.sharding.Mesh(
-            np.array(jax.devices()[:4]).reshape(1, 4), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        small = make_auto_device_mesh(
+            np.array(jax.devices()[:4]).reshape(1, 4), ("data", "model"))
         trainer.reshard(small)
         print(f"[elastic] resharded to 4 chips at step {trainer.step}")
         trainer.tcfg.total_steps = args.steps

@@ -1,0 +1,97 @@
+"""Version compatibility shims.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to the top-level
+``jax`` namespace in newer releases; the experimental module is slated for
+removal.  Import it from here so the repo runs on both sides of the move:
+
+    from repro.compat import shard_map
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+from jax import lax
+
+__all__ = ["shard_map", "axis_size", "pcast", "vma_of",
+           "make_auto_mesh", "make_auto_device_mesh",
+           "set_host_device_count"]
+
+
+def set_host_device_count(n: int) -> None:
+    """Give the process ``n`` CPU devices.  Must run before the first jax
+    backend use.  ``jax_num_cpu_devices`` only exists on jax >= 0.5; older
+    releases need the XLA flag."""
+    try:
+        jax.config.update("jax_num_cpu_devices", n)
+    except AttributeError:
+        flags = os.environ.get("XLA_FLAGS", "")
+        flag = f"--xla_force_host_platform_device_count={n}"
+        if flag not in flags:
+            os.environ["XLA_FLAGS"] = f"{flags} {flag}".strip()
+
+try:  # jax >= 0.6: public API
+    from jax import shard_map  # type: ignore[attr-defined]
+except ImportError:  # jax 0.4.x / 0.5.x
+    from jax.experimental.shard_map import shard_map as _shard_map_old
+
+    def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None, **_kw):
+        """Old-jax adapter.  ``axis_names`` (the new API's manual subset)
+        maps onto the experimental API's complementary ``auto`` set;
+        replication checking is off because the seed relies on
+        ``lax.pcast`` (absent pre-0.6) to satisfy it."""
+        extra = {}
+        if axis_names is not None:
+            auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+            if auto:
+                extra["auto"] = auto
+        return _shard_map_old(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=False, **extra)
+
+if hasattr(lax, "axis_size"):
+    axis_size = lax.axis_size
+else:
+    def axis_size(axis_name):
+        """Static size of a mapped axis: ``psum`` of a unit constant folds
+        to a concrete int on pre-0.6 jax."""
+        return lax.psum(1, axis_name)
+
+if hasattr(lax, "pcast"):
+    pcast = lax.pcast
+else:
+    def pcast(x, axis_name, *, to=None):  # noqa: ARG001
+        """No varying-manual-axes type system before jax 0.6 — identity
+        (the adapter above disables replication checking accordingly)."""
+        return x
+
+
+def vma_of(x):
+    """Varying-manual-axes set of ``x`` (``jax.typeof(x).vma`` on jax >= 0.6,
+    empty on older releases, which have no VMA tracking)."""
+    if hasattr(jax, "typeof"):
+        return tuple(getattr(jax.typeof(x), "vma", ()) or ())
+    return ()
+
+
+def make_auto_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` with every axis in Auto (GSPMD) mode.
+
+    ``axis_types`` / ``jax.sharding.AxisType`` only exist on jax >= 0.5;
+    older releases have no explicit-sharding mode, so plain ``make_mesh``
+    already means Auto there.
+    """
+    try:
+        axis_types = (jax.sharding.AxisType.Auto,) * len(axis_names)
+        return jax.make_mesh(axis_shapes, axis_names, axis_types=axis_types)
+    except (AttributeError, TypeError):
+        return jax.make_mesh(axis_shapes, axis_names)
+
+
+def make_auto_device_mesh(devices, axis_names):
+    """``jax.sharding.Mesh`` over an explicit device array, all axes Auto
+    (same version story as :func:`make_auto_mesh`)."""
+    try:
+        axis_types = (jax.sharding.AxisType.Auto,) * len(axis_names)
+        return jax.sharding.Mesh(devices, axis_names, axis_types=axis_types)
+    except (AttributeError, TypeError):
+        return jax.sharding.Mesh(devices, axis_names)

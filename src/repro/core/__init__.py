@@ -10,6 +10,8 @@ Layers (see DESIGN.md §1 for the paper-mechanism mapping):
 * :mod:`repro.core.endpoint`    — the standard endpoint (C5)
 * :mod:`repro.core.sync`        — barrier / mutex on remote CAS (C8)
 * :mod:`repro.core.netsim`      — cycle-level mesh simulator (C9 oracle)
+* :mod:`repro.netsim_jax`       — JIT-compiled simulator + traffic library
+  (C9 fast path; re-exported here for discoverability)
 """
 from . import coords, credits, endpoint, netsim, pgas, routing, sync, token_queue  # noqa: F401
 
@@ -18,3 +20,18 @@ from .credits import CreditCounter, make_credits, bdp_credits  # noqa: F401
 from .pgas import PacketBatch, make_packet_batch, remote_store, remote_load, remote_cas  # noqa: F401
 from .routing import xy_all_to_all, xy_all_reduce, xy_reduce_scatter, xy_all_gather, shift  # noqa: F401
 from .token_queue import TokenQueue, tq_make, tq_send, tq_recv  # noqa: F401
+
+_NETSIM_JAX_NAMES = ("netsim_jax", "JaxMeshSim", "PATTERNS", "SimConfig",
+                     "make_traffic")
+
+
+def __getattr__(name):  # PEP 562
+    # Lazy: repro.netsim_jax imports repro.core.netsim, so importing it
+    # eagerly here would be circular whenever netsim_jax is imported first.
+    if name in _NETSIM_JAX_NAMES:
+        from .. import netsim_jax
+        value = netsim_jax if name == "netsim_jax" else getattr(netsim_jax,
+                                                                name)
+        globals()[name] = value
+        return value
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -33,6 +33,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.compat import axis_size as _axis_size
+from repro.compat import pcast as _pcast
 from .routing import xy_all_to_all
 
 __all__ = ["PacketBatch", "make_packet_batch", "remote_store", "remote_load",
@@ -75,7 +77,7 @@ def make_packet_batch(num_tiles: int, slots: int,
 
 def tile_linear_index(x_axis: str, y_axis: str) -> jax.Array:
     """This tile's row-major id ``y * nx + x`` (paper Fig. 1 coordinates)."""
-    nx = lax.axis_size(x_axis)
+    nx = _axis_size(x_axis)
     return lax.axis_index(y_axis) * nx + lax.axis_index(x_axis)
 
 
@@ -153,7 +155,7 @@ def remote_cas(mem: jax.Array, pkts: PacketBatch, compare: jax.Array,
         old = old.at[i].set(jnp.where(flat_mask[i], cur, jnp.zeros((), m.dtype)))
         return m, old
 
-    old0 = lax.pcast(jnp.zeros(T * S, mem.dtype), (x_axis, y_axis), to="varying")
+    old0 = _pcast(jnp.zeros(T * S, mem.dtype), (x_axis, y_axis), to="varying")
     mem, old = lax.fori_loop(0, T * S, body, (mem, old0))
     old = xy_all_to_all(old.reshape(T, S), x_axis, y_axis, split_axis=0)
     return mem, old

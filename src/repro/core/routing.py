@@ -30,6 +30,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.compat import axis_size as _axis_size
+
 __all__ = [
     "shift",
     "ring_neighbors",
@@ -58,7 +60,7 @@ def shift(x: jax.Array, axis_name: str, shift_by: int = 1) -> jax.Array:
     This is the forward-path link: one ``ppermute`` hop.  Token queues and
     the pipeline schedule are built from it.
     """
-    size = lax.axis_size(axis_name)
+    size = _axis_size(axis_name)
     return lax.ppermute(x, axis_name, perm=ring_neighbors(size, shift_by))
 
 
@@ -93,8 +95,8 @@ def xy_all_to_all(x: jax.Array, x_axis: str, y_axis: str, *,
     ``(Y_dest, X_dest, ...)`` — i.e. destination = row-major
     ``(y, x)`` tile id, consistent with ``GridSpec.tile_id``.
     """
-    nx = lax.axis_size(x_axis)
-    ny = lax.axis_size(y_axis)
+    nx = _axis_size(x_axis)
+    ny = _axis_size(y_axis)
     n = x.shape[split_axis]
     if n % (nx * ny):
         raise ValueError(f"split dim {n} not divisible by mesh {nx}x{ny}")

@@ -10,7 +10,9 @@ link between pods ("the mesh extends over off-chip links", BSG Ten).
 """
 from __future__ import annotations
 
-import jax
+import jax  # noqa: F401  (re-exported for callers building custom meshes)
+
+from repro.compat import make_auto_mesh
 
 __all__ = ["make_production_mesh", "make_test_mesh", "HW"]
 
@@ -28,11 +30,9 @@ class HW:
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_auto_mesh(shape, axes)
 
 
 def make_test_mesh(shape=(2, 4), axes=("data", "model")):
     """Small mesh over however many devices the test process has."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_auto_mesh(shape, axes)

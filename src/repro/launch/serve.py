@@ -149,8 +149,8 @@ def main():
     ap.add_argument("--mesh-shape", default="2,4")
     args = ap.parse_args()
 
-    import jax
-    jax.config.update("jax_num_cpu_devices", args.devices)
+    from repro.compat import set_host_device_count
+    set_host_device_count(args.devices)
     from repro.configs import get_config, reduced_config
     from repro.launch.mesh import make_test_mesh
 

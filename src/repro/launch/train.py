@@ -30,8 +30,8 @@ def main():
     ap.add_argument("--resume", action="store_true")
     args = ap.parse_args()
 
-    import jax
-    jax.config.update("jax_num_cpu_devices", args.devices)
+    from repro.compat import set_host_device_count
+    set_host_device_count(args.devices)
 
     from repro import optim
     from repro.configs import SHAPES, get_config, reduced_config

@@ -23,8 +23,13 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax import lax, shard_map
+from jax import lax
 from jax.sharding import PartitionSpec as P
+
+from repro.compat import axis_size as _axis_size
+from repro.compat import pcast as _pcast
+from repro.compat import vma_of as _vma_of
+from repro.compat import shard_map
 
 __all__ = ["repeat_kv", "attention", "reference_attention",
            "chunked_attention", "decode_attention"]
@@ -127,9 +132,9 @@ def chunked_attention(q, k, v, *, causal: bool = True,
     den0 = jnp.zeros((b, h, sq), jnp.float32)
     # inside a shard_map island the carries must match the body's
     # varying-manual-axes type
-    vma = tuple(getattr(jax.typeof(q), "vma", ()) or ())
+    vma = tuple(_vma_of(q))
     if vma:
-        acc0, m0, den0 = (lax.pcast(t, vma, to="varying")
+        acc0, m0, den0 = (_pcast(t, vma, to="varying")
                           for t in (acc0, m0, den0))
     (acc, m, den), _ = lax.scan(body, (acc0, m0, den0), (kb, vb, pb),
                                 unroll=unroll)
@@ -191,7 +196,7 @@ def decode_attention(rules, q, k_cache, v_cache, cache_len,
         # linear shard index over the (possibly multi-axis) kv_seq group
         idx = jnp.zeros((), jnp.int32)
         for a in kv_axes:
-            idx = idx * lax.axis_size(a) + lax.axis_index(a)
+            idx = idx * _axis_size(a) + lax.axis_index(a)
         s_local = k_l.shape[1]
         out, num_den = _local_decode(q_l, k_l, v_l, len_l,
                                      idx * s_local, window)

@@ -30,8 +30,12 @@ from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import lax, shard_map
+from jax import lax
 from jax.sharding import PartitionSpec as P
+
+from repro.compat import pcast as _pcast
+from repro.compat import vma_of as _vma_of
+from repro.compat import shard_map
 
 from repro.configs.base import ModelConfig, MoEConfig
 from repro.kernels import grouped_matmul
@@ -44,9 +48,9 @@ def _pmean_all(x, names):
     """pmean over every manual axis, pcasting to varying only where the
     value is not already varying (VMA-safe)."""
     ax = tuple(sorted(names))
-    missing = tuple(a for a in ax if a not in jax.typeof(x).vma)
+    missing = tuple(a for a in ax if a not in _vma_of(x))
     if missing:
-        x = lax.pcast(x, missing, to="varying")
+        x = _pcast(x, missing, to="varying")
     return lax.pmean(x, ax)
 
 

@@ -17,8 +17,10 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import lax, shard_map
+from jax import lax
 from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
 
 from repro.configs.base import ModelConfig
 from repro.parallel.sharding import Rules

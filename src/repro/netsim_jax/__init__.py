@@ -1,0 +1,19 @@
+"""JIT-compiled mesh-network simulation: JAX simulator + traffic library.
+
+* :mod:`repro.netsim_jax.sim`     — the ``lax.scan`` cycle-level simulator
+  (semantics validated cycle-for-cycle against ``repro.core.netsim.MeshSim``)
+* :mod:`repro.netsim_jax.traffic` — synthetic traffic patterns (uniform,
+  transpose, bit-complement, tornado, hotspot, nearest-neighbor) emitting
+  injection programs consumable by both simulators
+"""
+from . import sim, traffic  # noqa: F401
+from .sim import (JaxMeshSim, Program, SimConfig, SimState,  # noqa: F401
+                  drained, empty_program_for, init_state, load_program,
+                  run_until_drained, run_until_drained_traced, simulate,
+                  step)
+from .traffic import PATTERNS, empty_program, make_traffic  # noqa: F401
+
+__all__ = ["JaxMeshSim", "Program", "SimConfig", "SimState", "drained",
+           "empty_program_for", "init_state", "load_program", "simulate",
+           "step", "run_until_drained", "run_until_drained_traced",
+           "PATTERNS", "empty_program", "make_traffic"]

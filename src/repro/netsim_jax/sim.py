@@ -1,0 +1,583 @@
+"""JIT-compiled JAX reimplementation of the cycle-level mesh simulator.
+
+Same semantics as :class:`repro.core.netsim.MeshSim` — 5-port routers with
+input FIFOs only, per-output round-robin arbitration, XY dimension-ordered
+routing with the reduced crossbar, independent forward/reverse physical
+networks, credit-counted standard endpoints — but expressed as a *pure
+per-cycle state transition* so the whole simulation compiles to one XLA
+program:
+
+* the per-cycle update is :func:`step` (``SimState -> SimState``), driven by
+  ``lax.scan`` in :func:`simulate` / ``lax.while_loop`` in
+  :func:`run_until_drained`;
+* stateful circular FIFOs become index arithmetic + masked one-hot scatter
+  (:func:`_fifo_push` / :func:`_fifo_pop`); round-robin arbitration is a
+  fixed 5-iteration priority minimisation instead of a data-dependent loop;
+* the *effective* router-FIFO depth and credit allowance live in
+  ``SimState`` (as scalars) rather than in the static config, so sweeps
+  over FIFO depth or ``max_out_credits`` are ``vmap``-able without
+  recompiling — as are sweeps over seeds via a stacked injection program.
+
+The numpy :class:`~repro.core.netsim.MeshSim` remains the oracle: the JAX
+path is validated cycle-for-cycle against it in
+``tests/test_netsim_jax.py``.  Keep the sub-step ordering here in lockstep
+with ``MeshSim.step`` — it is load-bearing for exact parity.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.netsim import NetConfig, NUM_DIRS, P, W, E, N, S
+from repro.core.netsim import OP_CAS, OP_LOAD, OP_STORE  # noqa: F401 (re-export)
+
+__all__ = ["SimConfig", "SimState", "Fifo", "Program", "init_state",
+           "load_program", "empty_program_for", "step", "simulate",
+           "run_until_drained", "run_until_drained_traced", "drained",
+           "JaxMeshSim"]
+
+# packet field order — identical to netsim._PKT_FIELDS
+FIELDS = ("dst_x", "dst_y", "src_x", "src_y", "addr", "data", "cmp", "op",
+          "tag")
+F = len(FIELDS)
+_FI = {k: i for i, k in enumerate(FIELDS)}
+
+PROG_FIELDS = ("dst_x", "dst_y", "addr", "data", "cmp", "op", "not_before")
+_PI = {k: i for i, k in enumerate(PROG_FIELDS)}
+
+I32 = jnp.int32
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    """Static (shape-determining) configuration; hashable for ``jax.jit``.
+
+    ``router_fifo`` / ``max_out_credits`` here are *capacities*; the
+    effective values used by the dynamics are ``SimState.fifo_depth`` /
+    ``SimState.max_credits`` (<= capacity), which may be traced/vmapped.
+    """
+    nx: int
+    ny: int
+    router_fifo: int = 4
+    ep_fifo: int = 4
+    max_out_credits: int = 16
+    mem_words: int = 64
+    resp_latency: int = 1
+
+    @classmethod
+    def from_netconfig(cls, cfg: NetConfig) -> "SimConfig":
+        return cls(nx=cfg.nx, ny=cfg.ny, router_fifo=cfg.router_fifo,
+                   ep_fifo=cfg.ep_fifo, max_out_credits=cfg.max_out_credits,
+                   mem_words=cfg.mem_words, resp_latency=cfg.resp_latency)
+
+    def to_netconfig(self, **kw) -> NetConfig:
+        return NetConfig(nx=self.nx, ny=self.ny, router_fifo=self.router_fifo,
+                         ep_fifo=self.ep_fifo,
+                         max_out_credits=self.max_out_credits,
+                         mem_words=self.mem_words,
+                         resp_latency=self.resp_latency, **kw)
+
+
+class Fifo(NamedTuple):
+    """Struct-of-arrays circular FIFOs: ``buf`` (F, ny, nx, ports, cap)."""
+    buf: jax.Array
+    head: jax.Array    # (ny, nx, ports)
+    count: jax.Array   # (ny, nx, ports)
+
+
+class Program(NamedTuple):
+    """Injection program, kept *outside* the scan carry (it is loop
+    invariant; carrying it would copy it every cycle)."""
+    buf: jax.Array      # (len(PROG_FIELDS), ny, nx, Lp)
+    length: jax.Array   # (ny, nx) — entries with op >= 0
+
+
+class SimState(NamedTuple):
+    fwd: Fifo
+    rev: Fifo
+    ep_in: Fifo
+    resp_valid: jax.Array      # (L, ny, nx) bool
+    resp_buf: jax.Array        # (F, L, ny, nx)
+    mem: jax.Array             # (ny, nx, mem_words)
+    credits: jax.Array         # (ny, nx)
+    rr: jax.Array              # (ny, nx, 5)
+    rr_rev: jax.Array          # (ny, nx, 5)
+    prog_ptr: jax.Array        # (ny, nx)
+    reg_valid: jax.Array       # (ny, nx) bool
+    reg_buf: jax.Array         # (F, ny, nx)
+    completed: jax.Array       # (ny, nx)
+    lat_sum: jax.Array         # (ny, nx)
+    out_of_credit_cycles: jax.Array  # (ny, nx)
+    cycle: jax.Array           # scalar
+    fifo_depth: jax.Array      # scalar — effective router FIFO depth
+    max_credits: jax.Array     # scalar — effective credit allowance
+
+
+def _empty_fifo(ny: int, nx: int, ports: int, cap: int) -> Fifo:
+    return Fifo(buf=jnp.zeros((F, ny, nx, ports, cap), I32),
+                head=jnp.zeros((ny, nx, ports), I32),
+                count=jnp.zeros((ny, nx, ports), I32))
+
+
+def init_state(cfg: SimConfig,
+               fifo_depth: Optional[jax.typing.ArrayLike] = None,
+               max_credits: Optional[jax.typing.ArrayLike] = None) -> SimState:
+    """Fresh all-idle state (no program loaded).
+
+    ``fifo_depth`` / ``max_credits`` default to the config capacities and
+    may be traced values (for ``vmap`` sweeps) as long as they never exceed
+    the static capacity.
+    """
+    ny, nx = cfg.ny, cfg.nx
+    L = cfg.resp_latency
+    depth = jnp.asarray(cfg.router_fifo if fifo_depth is None else fifo_depth, I32)
+    mc = jnp.asarray(cfg.max_out_credits if max_credits is None else max_credits, I32)
+    return SimState(
+        fwd=_empty_fifo(ny, nx, NUM_DIRS, cfg.router_fifo),
+        rev=_empty_fifo(ny, nx, NUM_DIRS, cfg.router_fifo),
+        ep_in=_empty_fifo(ny, nx, 1, cfg.ep_fifo),
+        resp_valid=jnp.zeros((L, ny, nx), bool),
+        resp_buf=jnp.zeros((F, L, ny, nx), I32),
+        mem=jnp.zeros((ny, nx, cfg.mem_words), I32),
+        credits=jnp.broadcast_to(mc, (ny, nx)).astype(I32),
+        rr=jnp.zeros((ny, nx, NUM_DIRS), I32),
+        rr_rev=jnp.zeros((ny, nx, NUM_DIRS), I32),
+        prog_ptr=jnp.zeros((ny, nx), I32),
+        reg_valid=jnp.zeros((ny, nx), bool),
+        reg_buf=jnp.zeros((F, ny, nx), I32),
+        completed=jnp.zeros((ny, nx), I32),
+        lat_sum=jnp.zeros((ny, nx), I32),
+        out_of_credit_cycles=jnp.zeros((ny, nx), I32),
+        cycle=jnp.asarray(0, I32),
+        fifo_depth=depth,
+        max_credits=mc,
+    )
+
+
+def load_program(entries: Dict[str, np.ndarray]) -> Program:
+    """Pack an injection program (same schema as ``MeshSim.load_program``:
+    fields shaped (ny, nx, L), ``op`` < 0 marks padding)."""
+    op = np.asarray(entries["op"])
+    ny, nx, Lp = op.shape
+    buf = np.zeros((len(PROG_FIELDS), ny, nx, Lp), np.int32)
+    i32 = np.iinfo(np.int32)
+    for k, i in _PI.items():
+        if k in entries:
+            v = np.asarray(entries[k])
+            if v.min(initial=0) < i32.min or v.max(initial=0) > i32.max:
+                raise ValueError(
+                    f"program field {k!r} exceeds the JAX simulator's int32 "
+                    "packet domain (the numpy oracle is int64); clamp values "
+                    f"to [{i32.min}, {i32.max}]")
+            buf[i] = v.astype(np.int32)
+    return Program(buf=jnp.asarray(buf),
+                   length=jnp.asarray((op >= 0).sum(-1), I32))
+
+
+def empty_program_for(cfg: SimConfig) -> Program:
+    """A no-op program (nothing to inject)."""
+    return Program(buf=jnp.full((len(PROG_FIELDS), cfg.ny, cfg.nx, 1), -1, I32),
+                   length=jnp.zeros((cfg.ny, cfg.nx), I32))
+
+
+# ----------------------------------------------------------------------
+# FIFO primitives (pure)
+# ----------------------------------------------------------------------
+def _fifo_peek(f: Fifo) -> jax.Array:
+    """Head packet of every FIFO: (F, ny, nx, ports).
+
+    A select chain over the (small, static) depth axis rather than a
+    gather — XLA CPU fuses the selects into one elementwise pass, while a
+    gather lowers to a scalar loop."""
+    cap = f.buf.shape[-1]
+    out = f.buf[..., 0]
+    for d in range(1, cap):
+        out = jnp.where(f.head[None] == d, f.buf[..., d], out)
+    return out
+
+
+def _fifo_pop(f: Fifo, mask: jax.Array, depth: jax.Array) -> Fifo:
+    m = mask.astype(I32)
+    return f._replace(head=(f.head + m) % depth, count=f.count - m)
+
+
+def _fifo_push(f: Fifo, mask: jax.Array, pkt: jax.Array,
+               depth: jax.Array) -> Fifo:
+    """Enqueue ``pkt`` (F, ny, nx, ports) where ``mask`` (ny, nx, ports);
+    caller guarantees space.  A one-hot masked select over the (small)
+    depth axis — fuses to a single elementwise pass on CPU, where XLA
+    scatters are far slower."""
+    cap = f.buf.shape[-1]
+    tail = (f.head + f.count) % depth                       # (ny, nx, ports)
+    onehot = (jnp.arange(cap, dtype=I32) == tail[..., None]) & mask[..., None]
+    buf = jnp.where(onehot[None], pkt[..., None], f.buf)
+    return f._replace(buf=buf, count=f.count + mask.astype(I32))
+
+
+# ----------------------------------------------------------------------
+# router
+# ----------------------------------------------------------------------
+def _route(heads: jax.Array, xs: jax.Array, ys: jax.Array) -> jax.Array:
+    """XY dimension-ordered output port for each head packet
+    (heads: (F, ny, nx, ports) -> (ny, nx, ports))."""
+    dx, dy = heads[_FI["dst_x"]], heads[_FI["dst_y"]]
+    x, y = xs[..., None], ys[..., None]
+    return jnp.where(dx > x, E, jnp.where(dx < x, W,
+           jnp.where(dy > y, S, jnp.where(dy < y, N, P)))).astype(I32)
+
+
+def _arbitrate(net: Fifo, rr: jax.Array, deliver_space: jax.Array,
+               xs: jax.Array, ys: jax.Array, depth: jax.Array,
+               ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Routing + round-robin arbitration for one network, one cycle
+    (mirrors the first half of ``MeshSim._router_step``).  Returns
+    (rr', pop_mask (ny,nx,in), has (ny,nx,out), moved_pkt (F,ny,nx,out))."""
+    ny, nx = deliver_space.shape
+    heads = _fifo_peek(net)                     # (F, ny, nx, 5)
+    valid = net.count > 0                       # (ny, nx, 5)
+    want = _route(heads, xs, ys)                # (ny, nx, 5)
+
+    # Destination space per output port (start-of-cycle, conservative),
+    # assembled with shifts + one stack (cheaper than slice updates on CPU).
+    space = net.count < depth                   # (ny, nx, 5)
+    pad = functools.partial(jnp.pad, mode="constant", constant_values=False)
+    out_space = jnp.stack([
+        deliver_space,                                  # P
+        pad(space[:, :-1, E], ((0, 0), (1, 0))),        # W out -> west nbr's E
+        pad(space[:, 1:, W], ((0, 0), (0, 1))),         # E out -> east nbr's W
+        pad(space[:-1, :, S], ((1, 0), (0, 0))),        # N out -> north nbr's S
+        pad(space[1:, :, N], ((0, 1), (0, 0))),         # S out -> south nbr's N
+    ], axis=-1)
+
+    # Round-robin arbitration, all five output ports at once: per output
+    # port o, the valid requester with minimal (in_port - rr[o]) mod 5 wins.
+    io = jnp.arange(NUM_DIRS, dtype=I32)
+    cand = (valid[..., :, None]                           # (ny, nx, in, out)
+            & (want[..., :, None] == io[None, None, None, :])
+            & out_space[..., None, :])
+    prio = (io[:, None] - rr[..., None, :]) % NUM_DIRS
+    prio = jnp.where(cand, prio, NUM_DIRS + 1)
+    best = prio.min(-2)                                   # (ny, nx, out)
+    win = jnp.where(best <= NUM_DIRS,
+                    jnp.argmin(prio, axis=-2).astype(I32), -1)
+    rr = jnp.where(win >= 0, (win + 1) % NUM_DIRS, rr)
+    has = win >= 0                                        # (ny, nx, out)
+    widx = jnp.clip(win, 0, NUM_DIRS - 1)
+    # winning packet per output port: select along the *input* axis
+    # (fusible select chain instead of a gather; see _fifo_peek)
+    moved_pkt = jnp.broadcast_to(heads[..., :1], (F, ny, nx, NUM_DIRS))
+    for i in range(1, NUM_DIRS):
+        moved_pkt = jnp.where(widx[None] == i, heads[..., i:i + 1],
+                              moved_pkt)                  # (F, ny, nx, out)
+    pop = ((io[:, None] == widx[..., None, :]) & has[..., None, :]).any(-1)
+    return rr, pop, has, moved_pkt
+
+
+def _neighbor_push_masks(has: jax.Array, moved_pkt: jax.Array,
+                         p_mask: jax.Array, p_pkt: jax.Array,
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """Turn per-output winners into per-input push masks for the neighbour
+    FIFOs, with the local port-P enqueue (endpoint response or program
+    injection) folded into the same single write.  Every destination
+    (tile, in_port) has exactly one feeder, so this is conflict-free."""
+    padm = functools.partial(jnp.pad, mode="constant", constant_values=False)
+    padp = jnp.pad
+    # in-port k of tile t receives the opposite-direction output of the
+    # adjacent tile: W <- west nbr's E, E <- east nbr's W, N <- north nbr's
+    # S, S <- south nbr's N; port P is the local enqueue.
+    mask_in = jnp.stack([
+        p_mask,
+        padm(has[:, :-1, E], ((0, 0), (1, 0))),
+        padm(has[:, 1:, W], ((0, 0), (0, 1))),
+        padm(has[:-1, :, S], ((1, 0), (0, 0))),
+        padm(has[1:, :, N], ((0, 1), (0, 0))),
+    ], axis=-1)
+    z2 = ((0, 0), (0, 0))
+    pkt_in = jnp.stack([
+        p_pkt,
+        padp(moved_pkt[:, :, :-1, E], z2 + ((1, 0),)),
+        padp(moved_pkt[:, :, 1:, W], z2 + ((0, 1),)),
+        padp(moved_pkt[:, :-1, :, S], ((0, 0), (1, 0), (0, 0))),
+        padp(moved_pkt[:, 1:, :, N], ((0, 0), (0, 1), (0, 0))),
+    ], axis=-1)
+    return mask_in, pkt_in
+
+
+# ----------------------------------------------------------------------
+# the per-cycle transition
+# ----------------------------------------------------------------------
+def _coords(cfg: SimConfig) -> Tuple[np.ndarray, np.ndarray]:
+    # host-side numpy constants (NOT jax arrays: a cached jax array created
+    # inside one trace would leak into the next); XLA hoists them out of
+    # the scan loop
+    ys, xs = np.mgrid[0:cfg.ny, 0:cfg.nx]
+    return xs.astype(np.int32), ys.astype(np.int32)
+
+
+def step(cfg: SimConfig, prog: Program, st: SimState,
+         ) -> Tuple[SimState, jax.Array]:
+    """One simulator cycle; returns (state', completions_this_cycle).
+
+    The sub-step order matches ``MeshSim.step`` exactly — do not reorder.
+    """
+    ny, nx = cfg.ny, cfg.nx
+    xs, ys = _coords(cfg)
+    c = st.cycle
+
+    # ---- registered response port becomes visible (stats record) ----
+    rv = st.reg_valid
+    completed = st.completed + rv.astype(I32)
+    lat_sum = st.lat_sum + jnp.where(rv, c - st.reg_buf[_FI["tag"]], 0)
+    done_now = rv.sum().astype(I32)
+
+    # ---- reverse network: route; P deliveries are ALWAYS absorbed ----
+    rr_rev, rpop, rhas, rmoved = _arbitrate(
+        st.rev, st.rr_rev, jnp.ones((ny, nx), bool), xs, ys, st.fifo_depth)
+    rev = _fifo_pop(st.rev, rpop, st.fifo_depth)
+    absorbed, rpkt = rhas[..., P], rmoved[..., P]
+    credits = st.credits + absorbed.astype(I32)
+    reg_valid = absorbed
+    reg_buf = jnp.where(absorbed[None], rpkt, 0)
+
+    # ---- endpoint: inject pending responses into reverse P FIFO ----
+    # (folded into the same buffer write as the neighbour enqueues; the
+    # neighbour pushes never touch port P, so tails are independent)
+    L = cfg.resp_latency
+    if L == 1:                    # static fast path: slot is always 0
+        slot = jnp.asarray(0, I32)
+        inj = st.resp_valid[0]                              # (ny, nx)
+        inj_pkt = st.resp_buf[:, 0]                         # (F, ny, nx)
+    else:
+        slot = (c % L).astype(I32)
+        inj = jnp.take(st.resp_valid, slot, axis=0)
+        inj_pkt = jnp.take(st.resp_buf, slot, axis=1)
+    rmask_in, rpkt_in = _neighbor_push_masks(rhas, rmoved, inj, inj_pkt)
+    rev = _fifo_push(rev, rmask_in, rpkt_in, st.fifo_depth)
+    if L == 1:
+        resp_valid = jnp.zeros_like(st.resp_valid)
+    else:
+        resp_valid = st.resp_valid.at[slot].set(False)
+    resp_buf = st.resp_buf
+
+    # ---- endpoint: service one request/cycle (line rate) ----------
+    resp_inflight = resp_valid.sum(0).astype(I32)
+    rev_space = (rev.count[..., P] + resp_inflight) < st.fifo_depth
+    can = (st.ep_in.count[..., 0] > 0) & rev_space
+    req = _fifo_peek(st.ep_in)[..., 0]                      # (F, ny, nx)
+    addr = jnp.clip(req[_FI["addr"]], 0, cfg.mem_words - 1)
+    addr_oh = jnp.arange(cfg.mem_words, dtype=I32) == addr[..., None]
+    cur = jnp.take_along_axis(st.mem, addr[..., None], axis=-1)[..., 0]
+    is_store = can & (req[_FI["op"]] == OP_STORE)
+    is_load = can & (req[_FI["op"]] == OP_LOAD)
+    is_cas = can & (req[_FI["op"]] == OP_CAS)
+    cas_hit = is_cas & (cur == req[_FI["cmp"]])
+    newval = jnp.where(is_store | cas_hit, req[_FI["data"]], cur)
+    mem = jnp.where(addr_oh & can[..., None], newval[..., None], st.mem)
+    ep_in = _fifo_pop(st.ep_in, can[..., None],
+                      jnp.asarray(cfg.ep_fifo, I32))
+    rdata = jnp.where(is_load | is_cas, cur, 0)
+    # build the response packet: src<->dst swapped so it routes home
+    resp = jnp.stack([
+        req[_FI["src_x"]], req[_FI["src_y"]],   # dst <- requester
+        xs, ys,                                 # src <- this tile
+        req[_FI["addr"]], rdata, req[_FI["cmp"]], req[_FI["op"]],
+        req[_FI["tag"]],
+    ])
+    if L == 1:                    # resp_valid[0] was just cleared above
+        resp_valid = can[None]
+        resp_buf = jnp.where(can[None, None], resp[:, None], resp_buf)
+    else:
+        wslot = slot              # c % L: inject and refill the same slot
+        resp_valid = resp_valid.at[wslot].set(
+            jnp.where(can, True, jnp.take(resp_valid, wslot, axis=0)))
+        resp_buf = resp_buf.at[:, wslot].set(
+            jnp.where(can[None], resp, jnp.take(resp_buf, wslot, axis=1)))
+
+    # ---- forward network: route; P deliveries go to endpoint FIFO ----
+    rr, fpop, fhas, fmoved = _arbitrate(
+        st.fwd, st.rr, ep_in.count[..., 0] < cfg.ep_fifo, xs, ys,
+        st.fifo_depth)
+    fwd = _fifo_pop(st.fwd, fpop, st.fifo_depth)
+    got, fpkt = fhas[..., P], fmoved[..., P]
+    ep_in = _fifo_push(ep_in, got[..., None], fpkt[..., None],
+                       jnp.asarray(cfg.ep_fifo, I32))
+
+    # ---- master injection from the per-tile program -----------------
+    # The injection enqueue targets port P of the post-pop forward FIFOs
+    # (neighbour pushes never touch port P), so it folds into the same
+    # buffer write as the neighbour enqueues.
+    pending = st.prog_ptr < prog.length
+    out_of_credit = st.out_of_credit_cycles + \
+        (pending & (credits <= 0)).astype(I32)
+    can_inj = pending & (credits > 0)
+    Lp = prog.buf.shape[-1]
+    pidx = jnp.clip(st.prog_ptr, 0, max(Lp - 1, 0))
+    entry = jnp.take_along_axis(
+        prog.buf, jnp.broadcast_to(pidx[None, ..., None],
+                                   (len(PROG_FIELDS), ny, nx, 1)),
+        axis=-1)[..., 0]                                    # (|PROG|, ny, nx)
+    can_inj = can_inj & (entry[_PI["not_before"]] <= c)
+    can_inj = can_inj & (fwd.count[..., P] < st.fifo_depth)
+    pkt = jnp.stack([
+        entry[_PI["dst_x"]], entry[_PI["dst_y"]],
+        xs, ys,
+        entry[_PI["addr"]], entry[_PI["data"]], entry[_PI["cmp"]],
+        entry[_PI["op"]],
+        jnp.full((ny, nx), c, I32),
+    ])                                                      # (F, ny, nx)
+    fmask_in, fpkt_in = _neighbor_push_masks(fhas, fmoved, can_inj, pkt)
+    fwd = _fifo_push(fwd, fmask_in, fpkt_in, st.fifo_depth)
+    credits = credits - can_inj.astype(I32)
+    prog_ptr = st.prog_ptr + can_inj.astype(I32)
+
+    st = SimState(fwd=fwd, rev=rev, ep_in=ep_in,
+                  resp_valid=resp_valid, resp_buf=resp_buf, mem=mem,
+                  credits=credits, rr=rr, rr_rev=rr_rev, prog_ptr=prog_ptr,
+                  reg_valid=reg_valid, reg_buf=reg_buf,
+                  completed=completed, lat_sum=lat_sum,
+                  out_of_credit_cycles=out_of_credit,
+                  cycle=c + 1, fifo_depth=st.fifo_depth,
+                  max_credits=st.max_credits)
+    return st, done_now
+
+
+def drained(st: SimState, prog: Program) -> jax.Array:
+    """Global-fence condition: programs issued, credits home, nothing in
+    the registered response port (same as ``MeshSim.run_until_drained``)."""
+    return ((st.prog_ptr >= prog.length).all()
+            & (st.credits == st.max_credits).all()
+            & ~st.reg_valid.any())
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3))
+def simulate(cfg: SimConfig, prog: Program, state: SimState, cycles: int,
+             ) -> Tuple[SimState, jax.Array]:
+    """Run ``cycles`` cycles under ``lax.scan``; returns
+    (final_state, completions_per_cycle (cycles,))."""
+    def body(st, _):
+        return step(cfg, prog, st)
+    return lax.scan(body, state, None, length=cycles)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3))
+def run_until_drained(cfg: SimConfig, prog: Program, state: SimState,
+                      max_cycles: int = 100_000) -> Tuple[SimState, jax.Array]:
+    """Step until the global fence closes (or after ``max_cycles`` further
+    steps); returns (final_state, drain_cycle)."""
+    def cond(carry):
+        st, i = carry
+        return (~drained(st, prog)) & (i < max_cycles)
+
+    def body(carry):
+        st, i = carry
+        return step(cfg, prog, st)[0], i + 1
+
+    final, _ = lax.while_loop(cond, body, (state, jnp.asarray(0, I32)))
+    return final, final.cycle
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3))
+def run_until_drained_traced(cfg: SimConfig, prog: Program, state: SimState,
+                             max_cycles: int = 100_000,
+                             ) -> Tuple[SimState, jax.Array, jax.Array]:
+    """Like :func:`run_until_drained` but also records the per-cycle
+    completion trace into a preallocated ``(max_cycles,)`` buffer; returns
+    (final_state, steps_taken, trace) — ``trace[:steps_taken]`` is valid."""
+    def cond(carry):
+        st, _trace, i = carry
+        return (~drained(st, prog)) & (i < max_cycles)
+
+    def body(carry):
+        st, trace, i = carry
+        st2, done = step(cfg, prog, st)
+        return st2, trace.at[i].set(done), i + 1
+
+    trace0 = jnp.zeros((max_cycles,), I32)
+    final, trace, steps = lax.while_loop(
+        cond, body, (state, trace0, jnp.asarray(0, I32)))
+    return final, steps, trace
+
+
+# ----------------------------------------------------------------------
+# convenience wrapper mirroring the MeshSim driving API
+# ----------------------------------------------------------------------
+class JaxMeshSim:
+    """Thin stateful wrapper over the functional API, drop-in enough for
+    the oracle's driving pattern::
+
+        sim = JaxMeshSim(NetConfig(nx=4, ny=4))
+        sim.load_program(prog)
+        sim.run(100)            # or sim.run_until_drained()
+        sim.mem, sim.completed, sim.completed_per_cycle, ...
+
+    Each ``run*`` call dispatches one jitted XLA program; repeated calls
+    with the same static config reuse the compilation cache.
+    """
+
+    def __init__(self, cfg, fifo_depth=None, max_credits=None):
+        if isinstance(cfg, NetConfig):
+            cfg = SimConfig.from_netconfig(cfg)
+        self.cfg = cfg
+        self.state = init_state(cfg, fifo_depth=fifo_depth,
+                                max_credits=max_credits)
+        self.program = empty_program_for(cfg)
+        self.completed_per_cycle: list = []
+
+    def load_program(self, entries: Dict[str, np.ndarray]) -> None:
+        self.program = load_program(entries)
+        self.state = self.state._replace(
+            prog_ptr=jnp.zeros((self.cfg.ny, self.cfg.nx), I32))
+
+    def run(self, cycles: int) -> None:
+        self.state, per_cycle = simulate(self.cfg, self.program, self.state,
+                                         cycles)
+        self.completed_per_cycle.extend(np.asarray(per_cycle).tolist())
+
+    def run_until_drained(self, max_cycles: int = 100_000) -> int:
+        self.state, steps, trace = run_until_drained_traced(
+            self.cfg, self.program, self.state, max_cycles)
+        steps = int(steps)
+        self.completed_per_cycle.extend(np.asarray(trace[:steps]).tolist())
+        if steps >= max_cycles and \
+                not bool(drained(self.state, self.program)):
+            raise RuntimeError(f"network did not drain in {max_cycles} cycles")
+        return int(self.state.cycle)
+
+    # oracle-shaped accessors -----------------------------------------
+    @property
+    def mem(self) -> np.ndarray:
+        return np.asarray(self.state.mem, np.int64)
+
+    @property
+    def completed(self) -> np.ndarray:
+        return np.asarray(self.state.completed, np.int64)
+
+    @property
+    def lat_sum(self) -> np.ndarray:
+        return np.asarray(self.state.lat_sum, np.int64)
+
+    @property
+    def credits(self) -> np.ndarray:
+        return np.asarray(self.state.credits, np.int64)
+
+    @property
+    def out_of_credit_cycles(self) -> np.ndarray:
+        return np.asarray(self.state.out_of_credit_cycles, np.int64)
+
+    @property
+    def cycle(self) -> int:
+        return int(self.state.cycle)
+
+    def mean_latency(self) -> float:
+        done = int(self.completed.sum())
+        return float(self.lat_sum.sum()) / max(done, 1)
+
+    def throughput(self, warmup: int = 0) -> float:
+        per = self.completed_per_cycle[warmup:]
+        return float(np.sum(per)) / max(len(per), 1)

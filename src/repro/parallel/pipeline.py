@@ -26,8 +26,11 @@ from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import lax, shard_map
+from jax import lax
 from jax.sharding import PartitionSpec as P
+
+from repro.compat import pcast as _pcast
+from repro.compat import shard_map
 
 from repro.core.routing import shift
 
@@ -64,7 +67,7 @@ def pipeline_apply(body: Callable, params_stacked, x_micro: jax.Array,
         # (S, L/S, ...) sharded on dim 0 -> local (1, L/S, ...): drop it
         params_l = jax.tree.map(lambda p: p[0], params_l)
         # activations become stage-varying the moment stages diverge
-        xm = lax.pcast(xm, (stage_axis,), to="varying")
+        xm = _pcast(xm, (stage_axis,), to="varying")
         sid = lax.axis_index(stage_axis)
         n_micro = xm.shape[0]
         ticks = n_micro + n_stages - 1

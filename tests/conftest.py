@@ -17,16 +17,16 @@ except Exception:  # pragma: no cover - older jax fallback
 
 import pytest  # noqa: E402
 
+from repro.compat import make_auto_mesh  # noqa: E402
+
 
 @pytest.fixture(scope="session")
 def mesh2x4():
     """A (y=2, x=4) tile grid — 8 tiles, one per CPU device."""
-    return jax.make_mesh((2, 4), ("y", "x"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_auto_mesh((2, 4), ("y", "x"))
 
 
 @pytest.fixture(scope="session")
 def mesh_dm():
     """A (data=2, model=4) mesh in the production axis naming."""
-    return jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_auto_mesh((2, 4), ("data", "model"))

@@ -1,5 +1,6 @@
 """PGAS addressing + XY routing geometry (paper C1/C4)."""
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.coords import (GridSpec, decode_address, encode_address,

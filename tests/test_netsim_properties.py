@@ -11,6 +11,9 @@ duplicated" and "credits are conserved":
   router; any violation would abort the step).
 """
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.netsim import MeshSim, NetConfig, OP_LOAD, OP_STORE

@@ -3,6 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -114,7 +115,7 @@ def test_error_feedback_telescopes():
 
 def test_cross_pod_psum_error_feedback(mesh_dm):
     """Compressed psum inside shard_map matches the exact psum closely."""
-    from jax import shard_map
+    from repro.compat import shard_map
     from jax.sharding import PartitionSpec as P
 
     x = jnp.asarray(np.random.default_rng(1)

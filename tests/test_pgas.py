@@ -9,8 +9,9 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
 
 from repro.core import endpoint as ep
 from repro.core import pgas

@@ -3,8 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax import lax, shard_map
+from jax import lax
 from jax.sharding import PartitionSpec as P
+
+from repro.compat import make_auto_mesh, shard_map
 
 from repro.core.routing import (a2a_phase_cost, allreduce_cost, shift,
                                 xy_all_gather, xy_all_reduce,
@@ -103,8 +105,7 @@ def test_cost_model_monotone_and_zero_for_singleton():
 
 def test_xy_a2a_rejects_bad_split():
     import jax
-    mesh = jax.make_mesh((2, 4), ("y", "x"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_auto_mesh((2, 4), ("y", "x"))
 
     def f(local):
         return xy_all_to_all(local[0], "x", "y", split_axis=0)[None]

@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 
 from repro import optim
+from repro.compat import make_auto_device_mesh
 from repro.configs import get_config, reduced_config
 from repro.configs.base import ShapeConfig
 from repro.data.pipeline import batch_iterator
@@ -69,9 +70,8 @@ def test_elastic_reshard(tmp_path, mesh_dm):
     it = batch_iterator(cfg, SHAPE)
     tr.tcfg.total_steps = 2
     tr.run(it)
-    small = jax.sharding.Mesh(
-        np.array(jax.devices()[:4]).reshape(1, 4), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    small = make_auto_device_mesh(
+        np.array(jax.devices()[:4]).reshape(1, 4), ("data", "model"))
     tr.reshard(small)
     assert tr.mesh.devices.size == 4
     tr.tcfg.total_steps = 4
