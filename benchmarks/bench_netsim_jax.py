@@ -13,11 +13,13 @@ from typing import Dict, List
 import numpy as np
 
 from repro.core.netsim import unloaded_rtt
-from repro.netsim_jax import (PATTERNS, SimConfig, init_state, load_program,
-                              make_traffic, simulate)
+from repro.netsim_jax import (DEFAULT_SWEEP_RATES, PATTERNS, SimConfig,
+                              curve_record, init_state, load_latency_sweep,
+                              load_program, make_traffic, simulate,
+                              sweep_config)
 
 __all__ = ["bench_pattern_sweep", "bench_bisection_16x32",
-           "bench_credit_sweep_vmap", "run"]
+           "bench_credit_sweep_vmap", "bench_load_latency_8x8", "run"]
 
 
 def bench_pattern_sweep(nx: int = 16, ny: int = 16,
@@ -103,10 +105,48 @@ def bench_credit_sweep_vmap(hops: int = 14) -> Dict:
             "wall_s_incl_compile": round(wall, 2), "ok": ok}
 
 
+def bench_load_latency_8x8(nx: int = 8, ny: int = 8) -> Dict:
+    """Full load–latency saturation curves (phased warmup/measure/drain
+    methodology, per-packet latency histograms) for every traffic pattern
+    on an 8x8 array, each a single vmapped XLA program over offered loads.
+
+    Checks: every curve is monotone nondecreasing up to its saturation
+    knee (and stays saturated past it), and the uniform-random saturation
+    point lands within 10% of the analytic bisection bound — on a k x k
+    mesh under XY routing, uniform traffic loads the busiest bisection
+    channel at ``k/4`` x the injection rate, so saturation is at
+    ``r = 4/k`` packets/cycle/tile (0.5 for k = 8)."""
+    if nx != ny:
+        raise ValueError(
+            f"the 4/k bisection bound below assumes a square mesh, "
+            f"got {nx}x{ny}")
+    rates = DEFAULT_SWEEP_RATES
+    cfg = sweep_config(nx, ny)
+    bisection_rate = 4.0 / nx
+    curves, ok = {}, True
+    t0 = time.perf_counter()
+    for name in sorted(PATTERNS):
+        out = load_latency_sweep(name, nx, ny, rates, warmup=300,
+                                 measure=500, drain=500, cfg=cfg, seed=0)
+        curves[name] = curve_record(out)
+        ok &= bool(out["monotone"])
+    wall = time.perf_counter() - t0
+    sat_u = curves["uniform"]["saturation_rate"]
+    sat_ok = sat_u is not None and \
+        abs(sat_u - bisection_rate) <= 0.10 * bisection_rate
+    ok &= sat_ok
+    return {"name": "load_latency_curves_8x8", "mesh": f"{nx}x{ny}",
+            "bisection_saturation_rate": bisection_rate,
+            "uniform_saturation_rate": sat_u,
+            "uniform_within_10pct_of_bisection": sat_ok,
+            "curves": curves, "wall_s_incl_compile": round(wall, 2),
+            "ok": bool(ok)}
+
+
 def run() -> List[Dict]:
     out = []
     for fn in (bench_pattern_sweep, bench_bisection_16x32,
-               bench_credit_sweep_vmap):
+               bench_credit_sweep_vmap, bench_load_latency_8x8):
         t0 = time.perf_counter()
         rec = fn()
         rec["wall_s"] = round(time.perf_counter() - t0, 2)

@@ -3,7 +3,9 @@
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run --suite netsim
 
-Writes a JSON summary to experiments/bench_results.json.
+Writes a JSON summary to experiments/bench_results.json; the netsim_jax
+load–latency saturation curves are additionally written to
+experiments/load_latency.json (uploaded as a CI artifact).
 """
 from __future__ import annotations
 
@@ -30,8 +32,13 @@ def main() -> None:
     t0 = time.perf_counter()
     for name in picked:
         print(f"\n=== suite: {name} ===", flush=True)
-        mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
-        results[name] = mod.run()
+        try:
+            mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
+            results[name] = mod.run()
+        except Exception as e:  # still write the JSON for the other suites
+            print(f"[FAIL] suite {name} crashed: {e!r}", flush=True)
+            results[name] = [{"name": f"{name} (crashed)", "ok": False,
+                              "error": repr(e)}]
     wall = time.perf_counter() - t0
 
     flat = [r for rs in results.values() for r in rs]
@@ -42,6 +49,13 @@ def main() -> None:
     with open(out / "bench_results.json", "w") as f:
         json.dump(results, f, indent=1, default=str)
     print(f"wrote {out / 'bench_results.json'}")
+    # standalone artifact: the load–latency saturation curves
+    sweeps = [r for r in results.get("netsim_jax", [])
+              if r.get("name") == "load_latency_curves_8x8"]
+    if sweeps:
+        with open(out / "load_latency.json", "w") as f:
+            json.dump(sweeps[0], f, indent=1, default=str)
+        print(f"wrote {out / 'load_latency.json'}")
     if n_ok != len(flat):
         raise SystemExit(1)
 

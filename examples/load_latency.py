@@ -1,0 +1,86 @@
+"""Reproduce the load–latency saturation-curve figure for the mesh NoC.
+
+Runs the phased warmup -> measurement-window -> drain methodology (per-link
+telemetry + per-packet latency histograms, see README "Load–latency
+measurement") over a grid of offered loads for each traffic pattern, as one
+vmapped XLA program per pattern, then prints the curves as an ASCII figure
+and writes the raw data to experiments/load_latency.json.
+
+  PYTHONPATH=src python examples/load_latency.py
+  PYTHONPATH=src python examples/load_latency.py --nx 8 --ny 8 \
+      --patterns uniform transpose --measure 500
+"""
+import argparse
+import json
+from pathlib import Path
+
+import numpy as np
+
+from repro.netsim_jax import (DEFAULT_SWEEP_RATES, PATTERNS, curve_record,
+                              load_latency_sweep, sweep_config)
+
+
+def ascii_curve(rates, lat, sat_idx, width: int = 50) -> str:
+    """One bar per offered load, length ~ log latency, knee marked."""
+    lat = np.asarray(lat, float)
+    # a rate whose window delivered nothing measures lat 0; clamp the bar
+    # scale so the log stays finite instead of aborting the whole figure
+    clamped = np.maximum(lat, 1.0)
+    scale = width / max(np.log10(clamped.max() / clamped.min()), 1e-9)
+    rows = []
+    for i, (r, l, lc) in enumerate(zip(rates, lat, clamped)):
+        bar = "#" * max(int(np.log10(lc / clamped.min()) * scale), 1)
+        mark = "  <- saturation" if i == sat_idx else ""
+        rows.append(f"    {r:5.2f} | {bar:<{width}s} {l:8.1f}{mark}")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nx", type=int, default=8)
+    ap.add_argument("--ny", type=int, default=8)
+    ap.add_argument("--patterns", nargs="+", default=sorted(PATTERNS),
+                    choices=sorted(PATTERNS))
+    ap.add_argument("--rates", nargs="+", type=float,
+                    default=list(DEFAULT_SWEEP_RATES))
+    ap.add_argument("--warmup", type=int, default=300)
+    ap.add_argument("--measure", type=int, default=500)
+    ap.add_argument("--drain", type=int, default=500)
+    args = ap.parse_args()
+
+    cfg = sweep_config(args.nx, args.ny)
+    results = {}
+    print(f"== load–latency curves, {args.nx}x{args.ny} mesh "
+          f"(warmup {args.warmup} / measure {args.measure} / "
+          f"drain {args.drain} cycles) ==")
+    for name in args.patterns:
+        try:
+            out = load_latency_sweep(name, args.nx, args.ny, args.rates,
+                                     warmup=args.warmup,
+                                     measure=args.measure,
+                                     drain=args.drain, cfg=cfg, seed=0)
+        except ValueError as e:        # e.g. transpose on a non-square mesh
+            print(f"\n  {name}: skipped ({e})")
+            continue
+        sat = out["saturation_index"]
+        print(f"\n  {name}: zero-load {out['zero_load_latency']:.1f} cycles, "
+              f"saturation rate {out['saturation_rate']}, peak accepted "
+              f"{out['saturation_throughput']:.3f} pkts/cycle/tile")
+        print("    rate  | mean round-trip latency (log scale, cycles)")
+        print(ascii_curve(out["rates"], out["lat_mean"], sat))
+        results[name] = curve_record(out)
+
+    dest = Path(__file__).resolve().parents[1] / "experiments"
+    dest.mkdir(exist_ok=True)
+    # same record shape (and per-curve schema, via curve_record) as the
+    # bench_load_latency_8x8 CI artifact, so load_latency.json consumers
+    # see one format regardless of which producer ran last
+    record = {"name": "load_latency_curves", "mesh": f"{args.nx}x{args.ny}",
+              "curves": results}
+    with open(dest / "load_latency.json", "w") as f:
+        json.dump(record, f, indent=1, default=str)
+    print(f"\nwrote {dest / 'load_latency.json'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -44,11 +44,18 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 __all__ = ["NetConfig", "MeshSim", "OP_LOAD", "OP_STORE", "OP_CAS",
-           "P", "W", "E", "N", "S", "unloaded_rtt"]
+           "P", "W", "E", "N", "S", "unloaded_rtt", "LAT_BINS", "NO_MEASURE"]
 
 # bsg_noc_pkg: typedef enum {P=0, W, E, N, S}
 P, W, E, N, S = 0, 1, 2, 3, 4
 NUM_DIRS = 5
+
+# Telemetry: per-packet round-trip latency histogram resolution.  The last
+# bin is an overflow bucket (latency >= LAT_BINS - 1 cycles); both
+# simulators share this constant so their histograms stay bit-identical.
+LAT_BINS = 512
+# Default measurement window = everything (any int32 tag qualifies).
+NO_MEASURE = 2**31 - 1
 
 OP_LOAD = 0   # ePacketOp_remote_load
 OP_STORE = 1  # ePacketOp_remote_store
@@ -149,6 +156,21 @@ class MeshSim:
         self.lat_sum = np.zeros((ny, nx), np.int64)
         self.out_of_credit_cycles = np.zeros((ny, nx), np.int64)
         self.completed_per_cycle: List[int] = []
+        # telemetry (see the JAX twin in repro.netsim_jax.sim.SimState):
+        # packets leaving each router output port per network (P = ejection)
+        self.link_util_fwd = np.zeros((ny, nx, NUM_DIRS), np.int64)
+        self.link_util_rev = np.zeros((ny, nx, NUM_DIRS), np.int64)
+        # input-FIFO occupancy high-water marks, sampled at cycle boundaries
+        self.fifo_hwm_fwd = np.zeros((ny, nx, NUM_DIRS), np.int64)
+        self.fifo_hwm_rev = np.zeros((ny, nx, NUM_DIRS), np.int64)
+        self.ep_hwm = np.zeros((ny, nx), np.int64)
+        # per-packet round-trip latency histogram (inject -> registered
+        # response), counted only for packets whose injection cycle (tag)
+        # falls in [measure_start, measure_stop) — the phased-measurement
+        # window; defaults accept every packet
+        self.lat_hist = np.zeros(LAT_BINS, np.int64)
+        self.measure_start = 0
+        self.measure_stop = NO_MEASURE
         self.log: List[Tuple[int, int, int, int, int, int]] = []  # (cycle, sy, sx, op, tag, data)
         ys, xs = np.mgrid[0:ny, 0:nx]
         self._xs, self._ys = xs, ys
@@ -183,10 +205,14 @@ class MeshSim:
         return out
 
     def _router_step(self, net: _Fifos, rr: np.ndarray,
-                     deliver_space: np.ndarray) -> Dict[str, np.ndarray]:
+                     deliver_space: np.ndarray,
+                     link_util: Optional[np.ndarray] = None,
+                     ) -> Dict[str, np.ndarray]:
         """One cycle of every router in one network.
 
         ``deliver_space`` (ny, nx) — can the P output deliver this cycle.
+        ``link_util`` (ny, nx, 5) — telemetry accumulator, incremented in
+        place for every output port that fires (P counts ejections).
         Returns the packets delivered out of the P port (fields + 'valid').
         """
         cfg = self.cfg
@@ -225,6 +251,8 @@ class MeshSim:
         delivered = {k: np.zeros((cfg.ny, cfg.nx), np.int64) for k in _PKT_FIELDS}
         delivered_valid = np.zeros((cfg.ny, cfg.nx), bool)
         moved = {}
+        if link_util is not None:
+            link_util += winners >= 0
         for o in range(NUM_DIRS):
             win = winners[..., o]
             has = win >= 0
@@ -273,6 +301,13 @@ class MeshSim:
             self.completed += rv
             lat = c - self.reg_pkt["tag"]
             self.lat_sum += np.where(rv, lat, 0)
+            # latency histogram, gated to the measurement window by the
+            # packet's injection cycle (its tag)
+            tag = self.reg_pkt["tag"]
+            in_win = rv & (tag >= self.measure_start) & (tag < self.measure_stop)
+            if in_win.any():
+                np.add.at(self.lat_hist,
+                          np.clip(lat[in_win], 0, LAT_BINS - 1), 1)
             if cfg.record_log:
                 for (y, x) in zip(*np.nonzero(rv)):
                     self.log.append((c, int(y), int(x),
@@ -284,7 +319,8 @@ class MeshSim:
 
         # ---- reverse network: route; P deliveries are ALWAYS absorbed ----
         rdel = self._router_step(self.rev, self.rr_rev,
-                                 deliver_space=np.ones((ny, nx), bool))
+                                 deliver_space=np.ones((ny, nx), bool),
+                                 link_util=self.link_util_rev)
         absorbed = rdel["valid"]
         # credits return for every reverse packet (commit acknowledgement)
         self.credits += absorbed.astype(np.int64)
@@ -339,7 +375,8 @@ class MeshSim:
 
         # ---- forward network: route; P deliveries go to endpoint FIFO ----
         fdel = self._router_step(self.fwd, self.rr,
-                                 deliver_space=self.ep_in.space()[..., 0])
+                                 deliver_space=self.ep_in.space()[..., 0],
+                                 link_util=self.link_util_fwd)
         got = fdel["valid"]
         if got.any():
             self.ep_in.push_mask(got[..., None],
@@ -369,6 +406,11 @@ class MeshSim:
                 self.credits -= can_inj.astype(np.int64)
                 self.prog_ptr += can_inj.astype(np.int64)
 
+        # ---- telemetry: FIFO occupancy high-water marks (cycle edge) ----
+        np.maximum(self.fifo_hwm_fwd, self.fwd.count, out=self.fifo_hwm_fwd)
+        np.maximum(self.fifo_hwm_rev, self.rev.count, out=self.fifo_hwm_rev)
+        np.maximum(self.ep_hwm, self.ep_in.count[..., 0], out=self.ep_hwm)
+
         self.cycle += 1
 
     # ------------------------------------------------------------------
@@ -386,6 +428,13 @@ class MeshSim:
                 return self.cycle
             self.step()
         raise RuntimeError(f"network did not drain in {max_cycles} cycles")
+
+    # ------------------------------------------------------------------
+    def set_measure_window(self, start: int, stop: int) -> None:
+        """Restrict the latency histogram to packets *injected* in cycle
+        range [start, stop) — the phased warmup/measure/drain gate."""
+        self.measure_start = int(start)
+        self.measure_stop = int(stop)
 
     # ------------------------------------------------------------------
     def mean_latency(self) -> float:

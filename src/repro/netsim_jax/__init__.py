@@ -5,8 +5,15 @@
 * :mod:`repro.netsim_jax.traffic` — synthetic traffic patterns (uniform,
   transpose, bit-complement, tornado, hotspot, nearest-neighbor) emitting
   injection programs consumable by both simulators
+* :mod:`repro.netsim_jax.measure` — the phased warmup/measure/drain
+  load–latency methodology over the per-link/per-packet telemetry, and
+  the ``vmap``-ed saturation-curve sweep driver
 """
-from . import sim, traffic  # noqa: F401
+from . import measure, sim, traffic  # noqa: F401
+from .measure import (DEFAULT_SWEEP_RATES, PhaseStats,  # noqa: F401
+                      curve_is_monotone, curve_record, hist_quantile,
+                      load_latency_sweep, measure_program, phased_stats,
+                      saturation_point, stack_rate_programs, sweep_config)
 from .sim import (JaxMeshSim, Program, SimConfig, SimState,  # noqa: F401
                   drained, empty_program_for, init_state, load_program,
                   run_until_drained, run_until_drained_traced, simulate,
@@ -16,4 +23,8 @@ from .traffic import PATTERNS, empty_program, make_traffic  # noqa: F401
 __all__ = ["JaxMeshSim", "Program", "SimConfig", "SimState", "drained",
            "empty_program_for", "init_state", "load_program", "simulate",
            "step", "run_until_drained", "run_until_drained_traced",
-           "PATTERNS", "empty_program", "make_traffic"]
+           "PATTERNS", "empty_program", "make_traffic",
+           "DEFAULT_SWEEP_RATES", "PhaseStats", "curve_is_monotone",
+           "curve_record", "hist_quantile", "load_latency_sweep",
+           "measure_program", "phased_stats", "saturation_point",
+           "stack_rate_programs", "sweep_config"]

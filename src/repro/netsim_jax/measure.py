@@ -1,0 +1,243 @@
+"""Phased load–latency measurement on the JIT-compiled mesh simulator.
+
+The standard NoC evaluation methodology (Dally & Towles §23.1; the same
+battery Ring-Mesh and Epiphany-V report):
+
+1. **warmup** — run the network to steady state; nothing is recorded;
+2. **measurement window** — every packet *injected* during the window is
+   tagged (via the telemetry gate ``SimState.measure_start/stop`` on the
+   packet's injection-cycle tag) and its round-trip latency lands in the
+   per-packet histogram; accepted throughput and channel utilization are
+   the deltas of the ``completed`` / ``link_util`` counters across the
+   window;
+3. **drain** — the simulation keeps running for a fixed budget of cycles
+   (and keeps *injecting*, so tagged packets experience real contention)
+   so the tagged packets can be delivered; only their latencies are in
+   the histogram.  A fixed budget keeps the whole program one bounded
+   ``lax.scan`` — past saturation some tagged packets may still be in
+   flight when it expires, so latency stats there are censored (biased
+   low); ``delivered < offered`` in :class:`PhaseStats` exposes exactly
+   how much.  Saturation itself is still located correctly: the knee is
+   crossed while the network delivers what it is offered.
+
+Everything here is pure JAX: :func:`phased_stats` is one jitted program
+(three ``lax.scan`` phases + histogram reductions), and
+:func:`load_latency_sweep` ``vmap``s it over a stack of injection
+programs — one per offered load — so a full saturation curve for a
+traffic pattern costs a single compilation.
+
+The saturation point is located per the usual convention: the first
+offered load whose mean latency reaches ``3x`` the zero-load latency
+(the latency measured at the lowest swept rate).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.netsim import LAT_BINS
+from .sim import Program, SimConfig, SimState, init_state, load_program, simulate
+from .traffic import make_traffic
+
+__all__ = ["PhaseStats", "phased_stats", "measure_program",
+           "stack_rate_programs", "load_latency_sweep", "saturation_point",
+           "curve_is_monotone", "curve_record", "hist_quantile",
+           "SATURATION_FACTOR", "DEFAULT_SWEEP_RATES", "sweep_config"]
+
+# mean latency >= SATURATION_FACTOR * zero-load latency <=> saturated
+SATURATION_FACTOR = 3.0
+
+# The canonical saturation-curve setup, shared by the benchmark
+# (bench_load_latency_8x8) and examples/load_latency.py so "reproduce the
+# figure" runs the exact grid the benchmark validates.
+DEFAULT_SWEEP_RATES = (0.02, 0.05, 0.1, 0.15, 0.2, 0.25, 0.3, 0.35,
+                       0.4, 0.45, 0.5, 0.55)
+
+
+def sweep_config(nx: int, ny: int) -> SimConfig:
+    """Mesh configuration for saturation sweeps: buffering deep enough
+    that flow control, not storage, is the limit."""
+    return SimConfig(nx=nx, ny=ny, max_out_credits=128, router_fifo=16)
+
+F32 = jnp.float32
+
+
+class PhaseStats(NamedTuple):
+    """Measurement-window statistics (all jnp scalars except ``hist``).
+
+    Rates are per tile per cycle; latencies are cycles (round trip,
+    injection -> registered response)."""
+    offered: jax.Array        # packets injected during the window
+    accepted: jax.Array       # packets completed during the window
+    delivered: jax.Array      # window-injected packets delivered by drain end
+    lat_mean: jax.Array
+    lat_p50: jax.Array
+    lat_p95: jax.Array
+    lat_p99: jax.Array
+    lat_max: jax.Array
+    peak_link_util: jax.Array  # busiest mesh channel (W/E/N/S), fwd network
+    hist: jax.Array            # (LAT_BINS,) latency histogram of the window
+
+
+def hist_quantile(hist: jax.Array, q: float) -> jax.Array:
+    """The q-quantile (in bins == cycles) of a counts histogram: smallest
+    bin b with cdf(b) >= ceil(q * total).  0 when the histogram is empty."""
+    total = hist.sum()
+    cdf = jnp.cumsum(hist)
+    target = jnp.ceil(q * total).astype(hist.dtype)
+    idx = jnp.searchsorted(cdf, jnp.maximum(target, 1))
+    return jnp.where(total > 0, jnp.minimum(idx, LAT_BINS - 1), 0).astype(F32)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3, 4, 5))
+def phased_stats(cfg: SimConfig, prog: Program, state: SimState,
+                 warmup: int, measure: int, drain: int) -> PhaseStats:
+    """Run warmup -> measurement window -> drain and reduce the telemetry
+    into :class:`PhaseStats`.  ``state`` should be fresh (its histogram
+    empty); the measurement window is cycles [warmup, warmup + measure)."""
+    ntiles = cfg.nx * cfg.ny
+    st = state._replace(
+        measure_start=state.cycle + warmup,
+        measure_stop=state.cycle + warmup + measure)
+    st, _ = simulate(cfg, prog, st, warmup)
+    inj0, comp0 = st.prog_ptr.sum(), st.completed.sum()
+    util0 = st.link_util_fwd
+    st, _ = simulate(cfg, prog, st, measure)
+    inj1, comp1 = st.prog_ptr.sum(), st.completed.sum()
+    util1 = st.link_util_fwd
+    st, _ = simulate(cfg, prog, st, drain)
+
+    hist = st.lat_hist
+    total = hist.sum()
+    bins = jnp.arange(LAT_BINS, dtype=F32)
+    denom = jnp.maximum(total, 1).astype(F32)
+    per_tile_cycle = float(measure * ntiles)
+    return PhaseStats(
+        offered=(inj1 - inj0).astype(F32) / per_tile_cycle,
+        accepted=(comp1 - comp0).astype(F32) / per_tile_cycle,
+        delivered=total.astype(F32) / per_tile_cycle,
+        lat_mean=(bins * hist).sum() / denom,
+        lat_p50=hist_quantile(hist, 0.50),
+        lat_p95=hist_quantile(hist, 0.95),
+        lat_p99=hist_quantile(hist, 0.99),
+        lat_max=jnp.max(jnp.where(hist > 0,
+                                  jnp.arange(LAT_BINS), 0)).astype(F32),
+        peak_link_util=(util1 - util0)[..., 1:].max().astype(F32) / measure,
+        hist=hist,
+    )
+
+
+def measure_program(cfg: SimConfig, entries: Dict[str, np.ndarray], *,
+                    warmup: int = 200, measure: int = 400,
+                    drain: int = 400) -> Dict[str, float]:
+    """Convenience: phased measurement of one injection program; returns
+    plain-python stats (``hist`` as a numpy array)."""
+    stats = phased_stats(cfg, load_program(entries), init_state(cfg),
+                         warmup, measure, drain)
+    out = {k: float(v) for k, v in stats._asdict().items() if k != "hist"}
+    out["hist"] = np.asarray(stats.hist)
+    return out
+
+
+def stack_rate_programs(pattern: str, nx: int, ny: int,
+                        rates: Sequence[float], horizon: int,
+                        **traffic_kw) -> Program:
+    """One injection program per offered load, stacked along a leading
+    axis for ``vmap``.  Programs are sized so the *fastest* rate never
+    exhausts its entries inside ``horizon`` cycles; slower rates simply
+    schedule their tail entries past the horizon (never injected), which
+    keeps every program the same shape."""
+    length = int(np.ceil(max(rates) * horizon)) + 1
+    progs = [load_program(make_traffic(pattern, nx, ny, length,
+                                       rate=float(r), **traffic_kw))
+             for r in rates]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *progs)
+
+
+def saturation_point(lat_mean: np.ndarray,
+                     factor: float = SATURATION_FACTOR) -> Optional[int]:
+    """Index of the first offered load whose mean latency is >= ``factor``
+    times the zero-load latency (``lat_mean[0]``), or None if the sweep
+    never saturates."""
+    lat = np.asarray(lat_mean, float)
+    hits = np.nonzero(lat >= factor * lat[0])[0]
+    return int(hits[0]) if hits.size else None
+
+
+def curve_is_monotone(lat_mean: np.ndarray, rel_tol: float = 0.02,
+                      factor: float = SATURATION_FACTOR) -> bool:
+    """Is a load–latency curve well formed?  Latency must be monotone
+    nondecreasing (within ``rel_tol`` measurement tolerance) up to and
+    including the saturation point, and must *stay* saturated
+    (>= ``factor`` x zero-load) afterwards.  Beyond saturation the
+    open-loop latency is unbounded, so finite-window measurements there
+    are noise — the standard curve is only defined up to the knee."""
+    lat = np.asarray(lat_mean, float)
+    sat = saturation_point(lat, factor)
+    knee = len(lat) - 1 if sat is None else sat
+    pre = lat[:knee + 1]
+    if not np.all(pre[1:] >= pre[:-1] * (1.0 - rel_tol)):
+        return False
+    return bool(np.all(lat[knee:] >= factor * lat[0] * (1.0 - rel_tol))) \
+        if sat is not None else True
+
+
+def curve_record(out: Dict[str, object]) -> Dict[str, object]:
+    """JSON-ready per-pattern record of a :func:`load_latency_sweep`
+    result — the one schema written to ``experiments/load_latency.json``
+    by both ``benchmarks/run.py`` (the CI artifact) and
+    ``examples/load_latency.py``."""
+    return {
+        "rates": [round(float(r), 3) for r in out["rates"]],
+        "offered": np.round(out["offered"], 3).tolist(),
+        "accepted": np.round(out["accepted"], 3).tolist(),
+        "delivered": np.round(out["delivered"], 3).tolist(),
+        "lat_mean": np.round(out["lat_mean"], 2).tolist(),
+        "lat_p50": np.round(out["lat_p50"], 1).tolist(),
+        "lat_p95": np.round(out["lat_p95"], 1).tolist(),
+        "lat_p99": np.round(out["lat_p99"], 1).tolist(),
+        "lat_max": np.round(out["lat_max"], 1).tolist(),
+        "peak_link_util": np.round(out["peak_link_util"], 3).tolist(),
+        "zero_load_latency": round(float(out["zero_load_latency"]), 2),
+        "saturation_index": out["saturation_index"],
+        "saturation_rate": out["saturation_rate"],
+        "saturation_throughput": round(float(out["saturation_throughput"]),
+                                       3),
+        "monotone": bool(out["monotone"]),
+    }
+
+
+def load_latency_sweep(pattern: str, nx: int, ny: int,
+                       rates: Sequence[float], *,
+                       warmup: int = 200, measure: int = 400,
+                       drain: int = 400, cfg: Optional[SimConfig] = None,
+                       **traffic_kw) -> Dict[str, object]:
+    """Full load–latency saturation curve for one traffic pattern: the
+    phased measurement ``vmap``-ed over offered loads in a single XLA
+    program.  Returns numpy arrays keyed like :class:`PhaseStats`, plus
+    the rate grid, zero-load latency, and the located saturation point."""
+    rates = sorted(float(r) for r in rates)
+    if cfg is None:
+        cfg = SimConfig(nx=nx, ny=ny)
+    horizon = warmup + measure + drain
+    progs = stack_rate_programs(pattern, nx, ny, rates, horizon, **traffic_kw)
+    stats = jax.vmap(
+        lambda p: phased_stats(cfg, p, init_state(cfg), warmup, measure,
+                               drain))(progs)
+    out: Dict[str, object] = {k: np.asarray(v)
+                              for k, v in stats._asdict().items()}
+    out["rates"] = np.asarray(rates)
+    out["pattern"] = pattern
+    out["mesh"] = f"{nx}x{ny}"
+    out["zero_load_latency"] = float(out["lat_mean"][0])
+    sat = saturation_point(out["lat_mean"])
+    out["saturation_index"] = sat
+    out["monotone"] = curve_is_monotone(out["lat_mean"])
+    out["saturation_rate"] = None if sat is None else float(rates[sat])
+    # saturation (peak accepted) throughput, per tile per cycle
+    out["saturation_throughput"] = float(np.max(out["accepted"]))
+    return out

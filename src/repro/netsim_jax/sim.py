@@ -34,7 +34,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from repro.core.netsim import NetConfig, NUM_DIRS, P, W, E, N, S
+from repro.core.netsim import (LAT_BINS, NO_MEASURE, NetConfig, NUM_DIRS,
+                               P, W, E, N, S)
 from repro.core.netsim import OP_CAS, OP_LOAD, OP_STORE  # noqa: F401 (re-export)
 
 __all__ = ["SimConfig", "SimState", "Fifo", "Program", "init_state",
@@ -117,6 +118,15 @@ class SimState(NamedTuple):
     cycle: jax.Array           # scalar
     fifo_depth: jax.Array      # scalar — effective router FIFO depth
     max_credits: jax.Array     # scalar — effective credit allowance
+    # telemetry (cycle-exact twins of the MeshSim accumulators) ---------
+    link_util_fwd: jax.Array   # (ny, nx, 5) — packets out of each port
+    link_util_rev: jax.Array   # (ny, nx, 5)
+    fifo_hwm_fwd: jax.Array    # (ny, nx, 5) — occupancy high-water marks
+    fifo_hwm_rev: jax.Array    # (ny, nx, 5)
+    ep_hwm: jax.Array          # (ny, nx)
+    lat_hist: jax.Array        # (LAT_BINS,) — per-packet RTT histogram
+    measure_start: jax.Array   # scalar — window gate on the packet tag
+    measure_stop: jax.Array    # scalar
 
 
 def _empty_fifo(ny: int, nx: int, ports: int, cap: int) -> Fifo:
@@ -157,6 +167,14 @@ def init_state(cfg: SimConfig,
         cycle=jnp.asarray(0, I32),
         fifo_depth=depth,
         max_credits=mc,
+        link_util_fwd=jnp.zeros((ny, nx, NUM_DIRS), I32),
+        link_util_rev=jnp.zeros((ny, nx, NUM_DIRS), I32),
+        fifo_hwm_fwd=jnp.zeros((ny, nx, NUM_DIRS), I32),
+        fifo_hwm_rev=jnp.zeros((ny, nx, NUM_DIRS), I32),
+        ep_hwm=jnp.zeros((ny, nx), I32),
+        lat_hist=jnp.zeros((LAT_BINS,), I32),
+        measure_start=jnp.asarray(0, I32),
+        measure_stop=jnp.asarray(NO_MEASURE, I32),
     )
 
 
@@ -333,8 +351,15 @@ def step(cfg: SimConfig, prog: Program, st: SimState,
     # ---- registered response port becomes visible (stats record) ----
     rv = st.reg_valid
     completed = st.completed + rv.astype(I32)
-    lat_sum = st.lat_sum + jnp.where(rv, c - st.reg_buf[_FI["tag"]], 0)
+    lat = c - st.reg_buf[_FI["tag"]]
+    lat_sum = st.lat_sum + jnp.where(rv, lat, 0)
     done_now = rv.sum().astype(I32)
+    # latency histogram, gated to the measurement window by the packet's
+    # injection cycle (its tag); scatter-add of 0 elsewhere is a no-op
+    tag = st.reg_buf[_FI["tag"]]
+    in_win = rv & (tag >= st.measure_start) & (tag < st.measure_stop)
+    lat_hist = st.lat_hist.at[jnp.clip(lat, 0, LAT_BINS - 1)].add(
+        in_win.astype(I32))
 
     # ---- reverse network: route; P deliveries are ALWAYS absorbed ----
     rr_rev, rpop, rhas, rmoved = _arbitrate(
@@ -436,6 +461,13 @@ def step(cfg: SimConfig, prog: Program, st: SimState,
     credits = credits - can_inj.astype(I32)
     prog_ptr = st.prog_ptr + can_inj.astype(I32)
 
+    # ---- telemetry: link counts + occupancy high-water marks ----------
+    link_util_fwd = st.link_util_fwd + fhas.astype(I32)
+    link_util_rev = st.link_util_rev + rhas.astype(I32)
+    fifo_hwm_fwd = jnp.maximum(st.fifo_hwm_fwd, fwd.count)
+    fifo_hwm_rev = jnp.maximum(st.fifo_hwm_rev, rev.count)
+    ep_hwm = jnp.maximum(st.ep_hwm, ep_in.count[..., 0])
+
     st = SimState(fwd=fwd, rev=rev, ep_in=ep_in,
                   resp_valid=resp_valid, resp_buf=resp_buf, mem=mem,
                   credits=credits, rr=rr, rr_rev=rr_rev, prog_ptr=prog_ptr,
@@ -443,7 +475,12 @@ def step(cfg: SimConfig, prog: Program, st: SimState,
                   completed=completed, lat_sum=lat_sum,
                   out_of_credit_cycles=out_of_credit,
                   cycle=c + 1, fifo_depth=st.fifo_depth,
-                  max_credits=st.max_credits)
+                  max_credits=st.max_credits,
+                  link_util_fwd=link_util_fwd, link_util_rev=link_util_rev,
+                  fifo_hwm_fwd=fifo_hwm_fwd, fifo_hwm_rev=fifo_hwm_rev,
+                  ep_hwm=ep_hwm, lat_hist=lat_hist,
+                  measure_start=st.measure_start,
+                  measure_stop=st.measure_stop)
     return st, done_now
 
 
@@ -569,6 +606,38 @@ class JaxMeshSim:
     @property
     def out_of_credit_cycles(self) -> np.ndarray:
         return np.asarray(self.state.out_of_credit_cycles, np.int64)
+
+    # telemetry ---------------------------------------------------------
+    @property
+    def link_util_fwd(self) -> np.ndarray:
+        return np.asarray(self.state.link_util_fwd, np.int64)
+
+    @property
+    def link_util_rev(self) -> np.ndarray:
+        return np.asarray(self.state.link_util_rev, np.int64)
+
+    @property
+    def fifo_hwm_fwd(self) -> np.ndarray:
+        return np.asarray(self.state.fifo_hwm_fwd, np.int64)
+
+    @property
+    def fifo_hwm_rev(self) -> np.ndarray:
+        return np.asarray(self.state.fifo_hwm_rev, np.int64)
+
+    @property
+    def ep_hwm(self) -> np.ndarray:
+        return np.asarray(self.state.ep_hwm, np.int64)
+
+    @property
+    def lat_hist(self) -> np.ndarray:
+        return np.asarray(self.state.lat_hist, np.int64)
+
+    def set_measure_window(self, start: int, stop: int) -> None:
+        """Restrict the latency histogram to packets *injected* in cycle
+        range [start, stop) — same contract as ``MeshSim.set_measure_window``."""
+        self.state = self.state._replace(
+            measure_start=jnp.asarray(start, I32),
+            measure_stop=jnp.asarray(stop, I32))
 
     @property
     def cycle(self) -> int:

@@ -42,7 +42,9 @@ def _base(nx: int, ny: int, length: int, rate: float, op: int,
           mem_words: int, seed: int) -> Tuple[Dict[str, np.ndarray],
                                               np.random.Generator]:
     if not 0.0 < rate <= 1.0:
-        raise ValueError(f"rate must be in (0, 1], got {rate}")
+        raise ValueError(
+            f"injection rate must be in (0, 1] packets/cycle/tile, "
+            f"got {rate}")
     prog = empty_program(nx, ny, length)
     i = np.arange(length)
     prog["op"][:] = op
@@ -71,12 +73,16 @@ def uniform_random(nx: int, ny: int, length: int, *, rate: float = 1.0,
 def transpose(nx: int, ny: int, length: int, *, rate: float = 1.0,
               op: int = OP_STORE, mem_words: int = 64,
               seed: int = 0) -> Dict[str, np.ndarray]:
-    """(x, y) -> (y, x).  On non-square meshes coordinates wrap
-    (``dst_x = y mod nx``, ``dst_y = x mod ny``)."""
+    """(x, y) -> (y, x).  Only defined on square meshes — on a non-square
+    mesh the transposed coordinate falls off the array."""
+    if nx != ny:
+        raise ValueError(
+            f"transpose traffic is undefined on a non-square mesh "
+            f"(got nx={nx}, ny={ny}); use a square mesh or another pattern")
     prog, _ = _base(nx, ny, length, rate, op, mem_words, seed)
     ys, xs = np.mgrid[0:ny, 0:nx]
-    prog["dst_x"][:] = (ys % nx)[..., None]
-    prog["dst_y"][:] = (xs % ny)[..., None]
+    prog["dst_x"][:] = ys[..., None]
+    prog["dst_y"][:] = xs[..., None]
     return prog
 
 
@@ -144,7 +150,12 @@ PATTERNS: Dict[str, Callable[..., Dict[str, np.ndarray]]] = {
 def make_traffic(pattern: str, nx: int, ny: int, length: int,
                  **kw) -> Dict[str, np.ndarray]:
     """Dispatch by pattern name (see :data:`PATTERNS`); keyword arguments
-    are forwarded to the generator (``rate``, ``op``, ``seed``, ...)."""
+    are forwarded to the generator (``rate``, ``op``, ``seed``, ...).
+
+    Raises :class:`ValueError` for unknown patterns, an injection rate
+    outside ``(0, 1]``, or a mesh on which the pattern is undefined
+    (e.g. transpose on a non-square mesh).
+    """
     try:
         fn = PATTERNS[pattern]
     except KeyError:

@@ -1,0 +1,151 @@
+"""Tests for the telemetry subsystem and the phased load–latency
+measurement methodology (repro.netsim_jax.measure).
+
+* zero-load: measured per-packet latency (the telemetry histogram) equals
+  the analytic ``unloaded_rtt(hops)`` on BOTH simulators, hops 1..6;
+* an idle mesh measures exactly zero channel utilization;
+* the oracle's histogram is consistent with its own per-response log;
+* histogram quantiles / saturation detection / curve validation units;
+* the phased methodology at low load: accepted == offered == rate and the
+  measured latency window is clean;
+* a small vmapped load–latency sweep produces a monotone curve that
+  saturates.
+"""
+import numpy as np
+import pytest
+
+from repro.core.netsim import (LAT_BINS, MeshSim, NetConfig, OP_LOAD,
+                               unloaded_rtt)
+from repro.netsim_jax import (JaxMeshSim, SimConfig, curve_is_monotone,
+                              empty_program, hist_quantile,
+                              load_latency_sweep, make_traffic,
+                              measure_program, saturation_point)
+
+NX, NY = 7, 2          # one mesh shape for all hop counts: one XLA compile
+RUN_CYCLES = unloaded_rtt(6) + 5
+
+
+def _single_packet_prog(hops):
+    prog = empty_program(NX, NY, 1)
+    prog["op"][0, 0, 0] = OP_LOAD
+    prog["dst_x"][0, 0, 0] = hops
+    prog["dst_y"][0, 0, 0] = 0
+    return prog
+
+
+@pytest.mark.parametrize("sim_cls", [MeshSim, JaxMeshSim],
+                         ids=["oracle", "jax"])
+def test_zero_load_latency_matches_analytic(sim_cls):
+    """One packet on an idle mesh: the telemetry histogram holds exactly
+    one sample, in the bin ``unloaded_rtt(hops)``, for hops 1..6."""
+    for hops in range(1, 7):
+        sim = sim_cls(NetConfig(nx=NX, ny=NY))
+        sim.load_program(_single_packet_prog(hops))
+        sim.run(RUN_CYCLES)
+        assert int(sim.completed[0, 0]) == 1
+        expect = np.zeros(LAT_BINS, np.int64)
+        expect[unloaded_rtt(hops)] = 1
+        np.testing.assert_array_equal(sim.lat_hist, expect)
+        # the request crossed exactly `hops` forward links + 1 ejection,
+        # and the response the same coming back
+        assert int(sim.link_util_fwd.sum()) == hops + 1
+        assert int(sim.link_util_rev.sum()) == hops + 1
+
+
+@pytest.mark.parametrize("sim_cls", [MeshSim, JaxMeshSim],
+                         ids=["oracle", "jax"])
+def test_idle_mesh_zero_utilization(sim_cls):
+    """No program -> every telemetry counter stays exactly 0."""
+    sim = sim_cls(NetConfig(nx=4, ny=3))
+    sim.load_program(empty_program(4, 3, 1))
+    sim.run(50)
+    for f in ("link_util_fwd", "link_util_rev", "fifo_hwm_fwd",
+              "fifo_hwm_rev", "ep_hwm", "lat_hist"):
+        assert int(getattr(sim, f).sum()) == 0, f"{f} nonzero on idle mesh"
+
+
+def test_oracle_histogram_consistent_with_response_log():
+    """The histogram is exactly the binned per-response log latencies."""
+    cfg = NetConfig(nx=4, ny=4, record_log=True)
+    sim = MeshSim(cfg)
+    sim.load_program(make_traffic("uniform", 4, 4, 6, rate=0.5, seed=3))
+    sim.run_until_drained()
+    want = np.zeros(LAT_BINS, np.int64)
+    for (cycle, _sy, _sx, _op, tag, _data) in sim.log:
+        want[min(cycle - tag, LAT_BINS - 1)] += 1
+    np.testing.assert_array_equal(sim.lat_hist, want)
+
+
+def test_measure_window_gates_by_injection_cycle():
+    """Only packets *injected* inside [start, stop) are histogrammed."""
+    cfg = NetConfig(nx=4, ny=4, record_log=True)
+    sim = MeshSim(cfg)
+    sim.set_measure_window(5, 12)
+    sim.load_program(make_traffic("uniform", 4, 4, 8, rate=0.4, seed=1))
+    sim.run_until_drained()
+    in_win = sum(1 for (_c, _sy, _sx, _op, tag, _d) in sim.log
+                 if 5 <= tag < 12)
+    assert 0 < int(sim.lat_hist.sum()) == in_win < int(sim.completed.sum())
+
+
+# ----------------------------------------------------------------------
+# measure-module units
+# ----------------------------------------------------------------------
+def test_hist_quantile():
+    hist = np.zeros(LAT_BINS)
+    hist[10] = 50
+    hist[20] = 49
+    hist[400] = 1
+    import jax.numpy as jnp
+    h = jnp.asarray(hist)
+    assert float(hist_quantile(h, 0.5)) == 10
+    assert float(hist_quantile(h, 0.95)) == 20
+    assert float(hist_quantile(h, 1.0)) == 400
+    assert float(hist_quantile(jnp.zeros(LAT_BINS), 0.5)) == 0
+
+
+def test_saturation_point_and_monotone():
+    lat = np.array([10.0, 10.5, 12.0, 31.0, 90.0])
+    assert saturation_point(lat) == 3          # 31 >= 3 * 10
+    assert saturation_point(np.array([10.0, 11.0, 12.0])) is None
+    assert curve_is_monotone(lat)
+    # a small pre-saturation dip within tolerance is fine…
+    assert curve_is_monotone(np.array([10.0, 9.9, 12.0, 31.0, 90.0]))
+    # …a real pre-saturation dip is not
+    assert not curve_is_monotone(np.array([10.0, 8.0, 12.0, 31.0, 90.0]))
+    # collapsing back *below* saturation after the knee is malformed
+    assert not curve_is_monotone(np.array([10.0, 11.0, 35.0, 12.0]))
+    # post-knee wobble that stays saturated is accepted
+    assert curve_is_monotone(np.array([10.0, 11.0, 35.0, 90.0, 80.0]))
+
+
+def test_phased_measure_low_load_is_clean():
+    """Well below saturation: accepted == offered == the injection rate,
+    latency ~ zero-load, and every window packet is delivered."""
+    cfg = SimConfig(nx=4, ny=4, max_out_credits=32)
+    entries = make_traffic("uniform", 4, 4, 200, rate=0.1, seed=0)
+    stats = measure_program(cfg, entries, warmup=100, measure=200,
+                            drain=200)
+    assert stats["offered"] == pytest.approx(0.1, rel=0.1)
+    assert stats["accepted"] == pytest.approx(0.1, rel=0.1)
+    assert stats["delivered"] == pytest.approx(stats["offered"], rel=0.05)
+    # 4x4 uniform zero-load mean RTT is a bit above the 1-hop 7 cycles
+    assert 7 <= stats["lat_mean"] <= 25
+    assert stats["lat_p50"] <= stats["lat_p95"] <= stats["lat_p99"] \
+        <= stats["lat_max"]
+    assert int(stats["hist"].sum()) == round(stats["delivered"] * 200 * 16)
+
+
+def test_load_latency_sweep_monotone_and_saturates():
+    """Small vmapped sweep: latency rises monotonically with offered load
+    and crosses the saturation threshold at high load."""
+    cfg = SimConfig(nx=4, ny=4, max_out_credits=64, router_fifo=8)
+    out = load_latency_sweep("transpose", 4, 4, [0.05, 0.3, 0.6, 1.0],
+                             warmup=100, measure=250, drain=300, cfg=cfg,
+                             seed=0)
+    assert list(out["rates"]) == sorted(out["rates"])
+    assert out["monotone"], f"non-monotone curve: {out['lat_mean']}"
+    assert out["saturation_rate"] is not None
+    assert out["zero_load_latency"] < 30
+    # below saturation the network delivers what is offered
+    assert out["accepted"][0] == pytest.approx(out["offered"][0], rel=0.05)

@@ -12,6 +12,7 @@ from repro.core.netsim import (MeshSim, NetConfig, OP_LOAD, OP_STORE,
                                unloaded_rtt)
 from repro.netsim_jax import (JaxMeshSim, PATTERNS, make_traffic)
 from repro.netsim_jax.sim import SimConfig
+from repro.netsim_jax.testing import assert_state_equal as _assert_state_equal
 
 MESHES = [(2, 2), (4, 4), (3, 5)]          # (nx, ny); incl. non-square
 
@@ -24,20 +25,12 @@ def _pair(cfg: NetConfig, entries):
     return a, b
 
 
-def _assert_state_equal(a: MeshSim, b: JaxMeshSim):
-    np.testing.assert_array_equal(a.mem, b.mem)
-    np.testing.assert_array_equal(a.completed, b.completed)
-    np.testing.assert_array_equal(a.lat_sum, b.lat_sum)
-    np.testing.assert_array_equal(a.credits, b.credits)
-    np.testing.assert_array_equal(a.out_of_credit_cycles,
-                                  b.out_of_credit_cycles)
-    assert a.completed_per_cycle == b.completed_per_cycle
-
-
 @pytest.mark.parametrize("pattern", sorted(PATTERNS))
 @pytest.mark.parametrize("nx,ny", MESHES)
 def test_parity_fixed_horizon(pattern, nx, ny):
     """Cycle-for-cycle equality over a fixed horizon, all six patterns."""
+    if pattern == "transpose" and nx != ny:
+        pytest.skip("transpose is undefined on non-square meshes")
     cfg = NetConfig(nx=nx, ny=ny, max_out_credits=6)
     entries = make_traffic(pattern, nx, ny, 8, rate=0.7, seed=11)
     a, b = _pair(cfg, entries)
@@ -50,6 +43,8 @@ def test_parity_fixed_horizon(pattern, nx, ny):
 @pytest.mark.parametrize("nx,ny", MESHES)
 def test_parity_drain_cycle(pattern, nx, ny):
     """The global fence closes on exactly the same cycle."""
+    if pattern == "transpose" and nx != ny:
+        pytest.skip("transpose is undefined on non-square meshes")
     cfg = NetConfig(nx=nx, ny=ny, max_out_credits=4)
     entries = make_traffic(pattern, nx, ny, 6, seed=3)
     a, b = _pair(cfg, entries)
@@ -137,7 +132,9 @@ def test_vmap_credit_sweep_matches_sequential():
 # ----------------------------------------------------------------------
 @pytest.mark.parametrize("pattern", sorted(PATTERNS))
 def test_traffic_destinations_in_range(pattern):
-    nx, ny, L = 6, 3, 9
+    # non-square mesh catches x/y mixups; transpose requires square
+    nx, ny = (4, 4) if pattern == "transpose" else (6, 3)
+    L = 9
     prog = make_traffic(pattern, nx, ny, L, seed=4)
     assert prog["op"].shape == (ny, nx, L)
     assert (prog["dst_x"] >= 0).all() and (prog["dst_x"] < nx).all()
@@ -170,3 +167,19 @@ def test_traffic_bit_complement_crosses_bisection():
 def test_traffic_unknown_pattern_raises():
     with pytest.raises(ValueError, match="unknown pattern"):
         make_traffic("nope", 4, 4, 1)
+
+
+@pytest.mark.parametrize("rate", [0.0, -0.5, 1.5, 2.0])
+def test_traffic_invalid_rate_raises(rate):
+    with pytest.raises(ValueError, match="rate must be in"):
+        make_traffic("uniform", 4, 4, 4, rate=rate)
+
+
+def test_traffic_transpose_non_square_raises():
+    with pytest.raises(ValueError, match="non-square"):
+        make_traffic("transpose", 3, 5, 4)
+    # square meshes still work and are an exact involution
+    prog = make_traffic("transpose", 4, 4, 2)
+    ys, xs = np.mgrid[0:4, 0:4]
+    assert (prog["dst_x"] == ys[..., None]).all()
+    assert (prog["dst_y"] == xs[..., None]).all()
