@@ -11,25 +11,21 @@ from typing import Dict, List
 
 import numpy as np
 
-from repro.core.netsim import (MeshSim, NetConfig, OP_LOAD, OP_STORE,
-                               unloaded_rtt)
+from repro.core.netsim import OP_LOAD, OP_STORE, unloaded_rtt
+from repro.mesh import MeshConfig, Simulator, empty_program, make_traffic
 
 __all__ = ["bench_fig3_rtt", "bench_bisection", "bench_credit_bdp",
            "bench_ordering", "bench_fence", "bench_jax_speedup", "run"]
 
 
 def _empty_prog(ny, nx, L):
-    prog = {k: np.zeros((ny, nx, L), np.int64)
-            for k in ("dst_x", "dst_y", "addr", "data", "cmp", "op",
-                      "not_before")}
-    prog["op"][:] = -1
-    return prog
+    return empty_program(nx, ny, L)
 
 
 def bench_fig3_rtt() -> Dict:
     """Fig. 3 + mesh_master_example.v: first load returns at cycle 7,
     then one per cycle; RTT grows +2 per Manhattan hop."""
-    sim = MeshSim(NetConfig(nx=8, ny=8, record_log=True))
+    sim = Simulator(MeshConfig(nx=8, ny=8, record_log=True))
     prog = _empty_prog(8, 8, 8)
     sim.mem[0, 1, :8] = np.arange(8)
     for i in range(8):
@@ -62,7 +58,7 @@ def bench_bisection(nx: int = 16, ny: int = 16) -> Dict:
             prog["dst_x"][y, x, :] = (x + nx // 2) % nx
             prog["dst_y"][y, x, :] = y
             prog["addr"][y, x, :] = np.arange(L)
-    sim = MeshSim(NetConfig(nx=nx, ny=ny, max_out_credits=64))
+    sim = Simulator(MeshConfig(nx=nx, ny=ny, max_out_credits=64))
     sim.load_program(prog)
     sim.run(600)
     thr = sim.throughput(warmup=100)
@@ -84,7 +80,7 @@ def bench_credit_bdp(hops: int = 14) -> Dict:
     cycles, warmup = 1000, 200
     for credits in (1, 2, 4, rtt // 2, rtt, rtt + 8, 2 * rtt):
         nx = hops + 1
-        sim = MeshSim(NetConfig(nx=nx, ny=1, max_out_credits=credits,
+        sim = Simulator(MeshConfig(nx=nx, ny=1, max_out_credits=credits,
                                 router_fifo=max(4, credits)))
         L = cycles + 500            # never program-limited
         prog = _empty_prog(1, nx, L)
@@ -105,7 +101,7 @@ def bench_credit_bdp(hops: int = 14) -> Dict:
 def bench_ordering() -> Dict:
     """Fig. 5: point-to-point order holds; responses from different
     destinations may return out of order."""
-    sim = MeshSim(NetConfig(nx=8, ny=1, record_log=True))
+    sim = Simulator(MeshConfig(nx=8, ny=1, record_log=True))
     prog = _empty_prog(1, 8, 2)
     # master 0: load from far slave (x=7) THEN near slave (x=1)
     prog["op"][0, 0, 0] = OP_LOAD
@@ -121,7 +117,7 @@ def bench_ordering() -> Dict:
     order = [d for (*_r, d) in sim.log]
     cross_reordered = order == [222, 111]
     # same-destination: two stores then a load back, must commit in order
-    sim2 = MeshSim(NetConfig(nx=4, ny=1))
+    sim2 = Simulator(MeshConfig(nx=4, ny=1))
     prog2 = _empty_prog(1, 4, 3)
     for i, (op, data) in enumerate([(OP_STORE, 5), (OP_STORE, 9), (OP_LOAD, 0)]):
         prog2["op"][0, 0, i] = op
@@ -140,7 +136,7 @@ def bench_ordering() -> Dict:
 def bench_fence() -> Dict:
     """Transaction fence: the fence completes exactly when out_credits_o is
     back at max_out_credits_p (Appendix A)."""
-    sim = MeshSim(NetConfig(nx=6, ny=6, max_out_credits=8))
+    sim = Simulator(MeshConfig(nx=6, ny=6, max_out_credits=8))
     L = 16
     prog = _empty_prog(6, 6, L)
     rng = np.random.default_rng(0)
@@ -162,16 +158,15 @@ def bench_jax_speedup(nx: int = 16, ny: int = 16, cycles: int = 2000) -> Dict:
     """The jitted JAX simulator vs this numpy oracle on a 16x16
     uniform-random run: bit-identical results, >= 10x faster steady-state
     (compile time reported separately)."""
-    from repro.netsim_jax import (SimConfig, init_state, load_program,
-                                  make_traffic, simulate)
+    from repro.netsim_jax import init_state, load_program, simulate
     entries = make_traffic("uniform", nx, ny, 64, seed=0)
-    sim = MeshSim(NetConfig(nx=nx, ny=ny))
+    sim = Simulator(MeshConfig(nx=nx, ny=ny))
     sim.load_program({k: v.copy() for k, v in entries.items()})
     t0 = time.perf_counter()
     sim.run(cycles)
     t_np = time.perf_counter() - t0
 
-    cfg = SimConfig(nx=nx, ny=ny)
+    cfg = MeshConfig(nx=nx, ny=ny).to_sim()
     prog = load_program(entries)
     t0 = time.perf_counter()
     final, per = simulate(cfg, prog, init_state(cfg), cycles)

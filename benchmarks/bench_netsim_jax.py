@@ -4,6 +4,11 @@ These runs are exactly the regime the numpy oracle cannot reach in
 reasonable wall time: the 512-core (16x32) array of the paper's bisection
 argument, full traffic-pattern sweeps, and a vmapped credit sweep that
 amortizes one compilation across every config.
+
+Scenario driving goes through the backend-agnostic
+:class:`repro.mesh.Simulator` facade; the vmapped sweep drops to the
+functional ``repro.netsim_jax`` layer, which is what the facade compiles
+to anyway.
 """
 from __future__ import annotations
 
@@ -13,10 +18,10 @@ from typing import Dict, List
 import numpy as np
 
 from repro.core.netsim import unloaded_rtt
-from repro.netsim_jax import (DEFAULT_SWEEP_RATES, PATTERNS, SimConfig,
-                              curve_record, init_state, load_latency_sweep,
-                              load_program, make_traffic, simulate,
-                              sweep_config)
+from repro.mesh import MeshConfig, PATTERNS, Simulator, make_traffic
+from repro.netsim_jax import (DEFAULT_SWEEP_RATES, curve_record,
+                              init_state, load_latency_sweep, load_program,
+                              simulate, sweep_config)
 
 __all__ = ["bench_pattern_sweep", "bench_bisection_16x32",
            "bench_credit_sweep_vmap", "bench_load_latency_8x8", "run"]
@@ -26,14 +31,14 @@ def bench_pattern_sweep(nx: int = 16, ny: int = 16,
                         cycles: int = 1500) -> Dict:
     """Saturation throughput (ops/cycle) of every traffic pattern on a
     16x16 array — the standard NoC evaluation battery."""
-    cfg = SimConfig(nx=nx, ny=ny, max_out_credits=32)
+    cfg = MeshConfig(nx=nx, ny=ny, max_out_credits=32)
     thr = {}
     warmup = cycles // 3
     for name in sorted(PATTERNS):
-        entries = make_traffic(name, nx, ny, cycles, seed=0)
-        prog = load_program(entries)
-        _, per = simulate(cfg, prog, init_state(cfg), cycles)
-        thr[name] = round(float(np.asarray(per[warmup:]).mean()), 2)
+        sim = Simulator(cfg, backend="jax")
+        sim.attach(make_traffic(name, nx, ny, cycles, seed=0))
+        sim.run(cycles)
+        thr[name] = round(sim.telemetry().throughput(warmup=warmup), 2)
     # adversarial patterns must not exceed the friendly ones
     ok = thr["neighbor"] >= thr["bit_complement"] and min(thr.values()) > 0
     return {"name": "traffic_pattern_sweep", "mesh": f"{nx}x{ny}",
@@ -49,15 +54,15 @@ def bench_bisection_16x32(cycles: int = 1200) -> Dict:
     permutation like bit-complement head-of-line blocks well below the
     bound)."""
     nx, ny = 16, 32
-    cfg = SimConfig(nx=nx, ny=ny, max_out_credits=64, router_fifo=4)
+    cfg = MeshConfig(nx=nx, ny=ny, max_out_credits=64, router_fifo=4)
     entries = make_traffic("uniform", nx, ny, cycles, seed=0)
     # fold every destination into the source's opposite half of the array
     half = np.where(np.arange(ny)[:, None, None] < ny // 2, ny // 2, 0)
     entries["dst_y"] = entries["dst_y"] % (ny // 2) + half
-    prog = load_program(entries)
+    sim = Simulator(cfg, backend="jax").attach(entries)
     t0 = time.perf_counter()
-    _, per = simulate(cfg, prog, init_state(cfg), cycles)
-    per = np.asarray(per)
+    sim.run(cycles)
+    per = np.asarray(sim.telemetry().completed_per_cycle)
     wall = time.perf_counter() - t0
     thr = float(per[cycles // 3:].mean())
     bound = 2.0 * nx          # fwd + rev each cross the ny-median once
@@ -80,8 +85,8 @@ def bench_credit_sweep_vmap(hops: int = 14) -> Dict:
 
     rtt = unloaded_rtt(hops)
     nx = hops + 1
-    cfg = SimConfig(nx=nx, ny=1, max_out_credits=2 * rtt,
-                    router_fifo=max(4, 2 * rtt))
+    cfg = MeshConfig(nx=nx, ny=1, max_out_credits=2 * rtt,
+                     router_fifo=max(4, 2 * rtt)).to_sim()
     cycles, warmup = 1000, 200
     entries = make_traffic("neighbor", nx, 1, cycles + 500)
     # single long-haul stream: tile 0 hammers the far end; others idle

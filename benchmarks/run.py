@@ -6,6 +6,11 @@
 Writes a JSON summary to experiments/bench_results.json; the netsim_jax
 load–latency saturation curves are additionally written to
 experiments/load_latency.json (uploaded as a CI artifact).
+
+Exit status: nonzero if any benchmark reports ``ok: false`` OR any suite
+crashes outright — a crashed suite still gets a failure record and the
+JSON artifacts are still written, but the process must not report
+success.
 """
 from __future__ import annotations
 
@@ -13,14 +18,25 @@ import argparse
 import json
 import time
 from pathlib import Path
+from typing import Dict, List
 
 SUITES = ("netsim", "netsim_jax", "collectives", "kernels", "train")
 
 
-def main() -> None:
+def run_suite(name: str) -> List[Dict]:
+    """Import and execute one benchmark suite (separated out so tests can
+    stub it when exercising the aggregator's crash handling)."""
+    mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
+    return mod.run()
+
+
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--suite", choices=SUITES, default=None)
-    args = ap.parse_args()
+    ap.add_argument("--out", type=Path,
+                    default=Path(__file__).resolve().parents[1] / "experiments",
+                    help="directory for the JSON artifacts")
+    args = ap.parse_args(argv)
     picked = [args.suite] if args.suite else list(SUITES)
 
     # the collectives/train suites exercise a 2x4 device mesh; must be set
@@ -28,24 +44,25 @@ def main() -> None:
     from repro.compat import set_host_device_count
     set_host_device_count(8)
 
-    results = {}
+    results: Dict[str, List[Dict]] = {}
+    crashed: List[str] = []
     t0 = time.perf_counter()
     for name in picked:
         print(f"\n=== suite: {name} ===", flush=True)
         try:
-            mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
-            results[name] = mod.run()
+            results[name] = run_suite(name)
         except Exception as e:  # still write the JSON for the other suites
             print(f"[FAIL] suite {name} crashed: {e!r}", flush=True)
             results[name] = [{"name": f"{name} (crashed)", "ok": False,
                               "error": repr(e)}]
+            crashed.append(name)
     wall = time.perf_counter() - t0
 
     flat = [r for rs in results.values() for r in rs]
     n_ok = sum(1 for r in flat if r.get("ok"))
     print(f"\n{n_ok}/{len(flat)} benchmarks OK in {wall:.1f}s")
-    out = Path(__file__).resolve().parents[1] / "experiments"
-    out.mkdir(exist_ok=True)
+    out = args.out
+    out.mkdir(parents=True, exist_ok=True)
     with open(out / "bench_results.json", "w") as f:
         json.dump(results, f, indent=1, default=str)
     print(f"wrote {out / 'bench_results.json'}")
@@ -56,9 +73,13 @@ def main() -> None:
         with open(out / "load_latency.json", "w") as f:
             json.dump(sweeps[0], f, indent=1, default=str)
         print(f"wrote {out / 'load_latency.json'}")
+    if crashed:
+        print(f"FAILED: suite(s) crashed: {', '.join(crashed)}")
+        return 1
     if n_ok != len(flat):
-        raise SystemExit(1)
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

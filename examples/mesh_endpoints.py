@@ -1,0 +1,92 @@
+"""Attach user designs to the mesh — the paper's integration story.
+
+The BaseJump manycore's headline interface is the standardized endpoint
+(`bsg_manycore_link`): any design that speaks the valid/ready forward
+link + credit-based reverse link can occupy a tile.  This example plugs
+two *reactive* user designs into the array through the
+:class:`repro.mesh.Endpoint` protocol:
+
+* a **remote-store DMA engine** streaming a buffer into a far tile's
+  memory with a bounded outstanding-store window, and
+* a **request/reply memory-controller client** pointer-chasing a linked
+  ring seeded in the controller tile's memory — each request depends on
+  the previous reply, so the traffic cannot be precomputed.
+
+Both run natively on the numpy oracle and, via the trace-to-program
+bridge, on the jitted JAX backend — with bit-identical telemetry, which
+this script asserts.
+
+  PYTHONPATH=src python examples/mesh_endpoints.py
+  PYTHONPATH=src python examples/mesh_endpoints.py --nx 4 --ny 4
+"""
+import argparse
+
+import numpy as np
+
+from repro.mesh import (DmaEndpoint, MemoryControllerEndpoint, MeshConfig,
+                        Simulator)
+
+
+def build(cfg: MeshConfig, backend: str) -> Simulator:
+    """One scenario, constructible on either backend: endpoints are
+    stateful, so each backend gets fresh instances."""
+    nx, ny, mw = cfg.nx, cfg.ny, cfg.mem_words
+    sim = Simulator(cfg, backend=backend, seed=0)
+
+    # seed a pointer ring in the memory-controller tile (far corner):
+    # mem[a] = (a + 3) % mw, so the chase hops addresses 5, 8, 11, ...
+    mem = np.zeros((ny, nx, mw), np.int64)
+    mem[ny - 1, nx - 1, :] = (np.arange(mw) + 3) % mw
+    sim.set_mem(mem)
+
+    sim.attach(DmaEndpoint(dst_x=nx - 1, dst_y=0,
+                           data=[100 + i for i in range(12)],
+                           max_inflight=4), at=(0, 0))
+    sim.attach(MemoryControllerEndpoint(dst_x=nx - 1, dst_y=ny - 1,
+                                        start_addr=5, n_requests=8,
+                                        mem_words=mw), at=(0, ny - 1))
+    return sim
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nx", type=int, default=8)
+    ap.add_argument("--ny", type=int, default=8)
+    args = ap.parse_args()
+    cfg = MeshConfig(nx=args.nx, ny=args.ny, mem_words=32)
+
+    print(f"== reactive endpoints on the {cfg.nx}x{cfg.ny} mesh ==")
+    sims = {}
+    for backend in ("numpy", "jax"):
+        sim = build(cfg, backend)
+        cycle = sim.run_until_drained()
+        sims[backend] = sim
+        print(f"  [{backend:5s}] drained at cycle {cycle}")
+
+    # the facade contract: one Telemetry record, bit-identical across
+    # backends — including for endpoint-driven (bridged) scenarios
+    t_np = sims["numpy"].telemetry()
+    t_jax = sims["jax"].telemetry()
+    t_np.assert_bit_identical(t_jax)
+    print("  telemetry bit-identical across backends")
+
+    dma = sims["numpy"].endpoints[(0, 0)]
+    landed = np.asarray(sims["numpy"].mem)[0, cfg.nx - 1, :12]
+    print(f"\n  DMA: {dma.sent} stores sent, {dma.acked} acked, "
+          f"peak window {dma.peak_inflight}")
+    print(f"       destination memory now {landed.tolist()}")
+
+    mc = sims["numpy"].endpoints[(0, cfg.ny - 1)]
+    print(f"\n  memory-controller client: chased {mc.visited} "
+          f"({len(mc.latencies)} replies, "
+          f"round-trip {min(mc.latencies)}..{max(mc.latencies)} cycles)")
+
+    # endpoint scenarios still export as injection programs -> vmap fodder
+    prog = sims["numpy"].injection_trace_program()
+    n = int((prog["op"] >= 0).sum())
+    print(f"\n  exported injection-trace program: {n} packets, "
+          f"replayable/vmappable on the JAX path")
+
+
+if __name__ == "__main__":
+    main()

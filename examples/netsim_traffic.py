@@ -1,70 +1,82 @@
-"""Quickstart: the JIT-compiled mesh simulator + traffic-pattern library.
+"""Quickstart: the unified mesh API (facade + traffic-pattern library).
 
-Runs every synthetic traffic pattern through the JAX simulator at
-Celerity scale (16x32 = 512 cores, far beyond what the numpy oracle can
-sweep interactively), checks one pattern cycle-for-cycle against the
-oracle on a small mesh, and sweeps the credit allowance in a single
-vmapped XLA program.
+Runs every synthetic traffic pattern through the JAX backend of the
+:class:`repro.mesh.Simulator` facade (default: Celerity scale, 16x32 =
+512 cores, far beyond what the numpy oracle can sweep interactively),
+checks one pattern's telemetry bit-for-bit between the two backends on a
+small mesh, and sweeps the credit allowance in a single vmapped XLA
+program via the functional layer.
 
   PYTHONPATH=src python examples/netsim_traffic.py
+  PYTHONPATH=src python examples/netsim_traffic.py --nx 4 --ny 4 --cycles 200
 """
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.netsim import MeshSim, NetConfig
-from repro.netsim_jax import (PATTERNS, JaxMeshSim, SimConfig, init_state,
-                              load_program, make_traffic, simulate)
+from repro.mesh import MeshConfig, PATTERNS, Simulator, make_traffic
+from repro.netsim_jax import init_state, load_program, simulate
 
 
-def pattern_sweep_512_cores():
-    nx, ny, cycles = 16, 32, 800
-    cfg = SimConfig(nx=nx, ny=ny, max_out_credits=32)
+def pattern_sweep(nx: int, ny: int, cycles: int) -> None:
+    cfg = MeshConfig(nx=nx, ny=ny, max_out_credits=32)
     print(f"== traffic patterns on the {nx}x{ny} ({nx * ny}-core) array ==")
     for name in sorted(PATTERNS):
         try:
-            prog = load_program(make_traffic(name, nx, ny, cycles, seed=0))
+            entries = make_traffic(name, nx, ny, cycles, seed=0)
         except ValueError as e:        # e.g. transpose on a non-square mesh
             print(f"  {name:16s} skipped ({e})")
             continue
+        sim = Simulator(cfg, backend="jax").attach(entries)
         t0 = time.perf_counter()
-        _, per = simulate(cfg, prog, init_state(cfg), cycles)
-        thr = float(np.asarray(per[cycles // 3:]).mean())
+        sim.run(cycles)
+        thr = sim.telemetry().throughput(warmup=cycles // 3)
         print(f"  {name:16s} {thr:8.2f} ops/cycle   "
               f"({time.perf_counter() - t0:.2f}s wall)")
 
 
-def oracle_parity_check():
-    cfg = NetConfig(nx=4, ny=4)
-    entries = make_traffic("transpose", 4, 4, 8, rate=0.5)
-    oracle = MeshSim(cfg)
-    oracle.load_program({k: v.copy() for k, v in entries.items()})
-    fast = JaxMeshSim(cfg)
-    fast.load_program(entries)
+def backend_parity_check(nx: int = 4, ny: int = 4) -> None:
+    """Same program, both backends, one facade — telemetry bit-identical."""
+    cfg = MeshConfig(nx=nx, ny=ny)
+    entries = make_traffic("uniform", nx, ny, 8, rate=0.5, seed=1)
+    oracle = Simulator(cfg, backend="numpy").attach(
+        {k: v.copy() for k, v in entries.items()})
+    fast = Simulator(cfg, backend="jax").attach(entries)
     c0, c1 = oracle.run_until_drained(), fast.run_until_drained()
-    assert c0 == c1 and np.array_equal(oracle.mem, fast.mem)
-    print(f"== oracle parity == drain cycle {c0}, memories identical")
+    assert c0 == c1
+    oracle.telemetry().assert_bit_identical(fast.telemetry())
+    print(f"== backend parity == drain cycle {c0}, telemetry bit-identical")
 
 
-def vmapped_credit_sweep():
-    cfg = SimConfig(nx=9, ny=1, max_out_credits=64, router_fifo=32)
-    entries = make_traffic("neighbor", 9, 1, 600)
+def vmapped_credit_sweep(hops: int = 8, cycles: int = 400) -> None:
+    nx = hops + 1
+    cfg = MeshConfig(nx=nx, ny=1, max_out_credits=64,
+                     router_fifo=32).to_sim()
+    entries = make_traffic("neighbor", nx, 1, cycles + 200)
     entries["op"][:] = -1
     entries["op"][0, 0, :] = 1          # one long-haul store stream
-    entries["dst_x"][0, 0, :] = 8
+    entries["dst_x"][0, 0, :] = hops
     prog = load_program(entries)
-    credits = jnp.asarray([1, 2, 4, 8, 16, 21, 32])
+    rtt = 2 * hops + 5
+    credits = jnp.asarray([1, 2, 4, 8, 16, rtt, 32])
     states = jax.vmap(lambda c: init_state(cfg, max_credits=c))(credits)
-    _, per = jax.vmap(lambda s: simulate(cfg, prog, s, 400))(states)
-    print("== credit sweep (one compile, 7 configs; RTT = 21 cycles) ==")
+    _, per = jax.vmap(lambda s: simulate(cfg, prog, s, cycles))(states)
+    print(f"== credit sweep (one compile, {len(credits)} configs; "
+          f"RTT = {rtt} cycles) ==")
     for c, row in zip(np.asarray(credits), np.asarray(per)):
-        print(f"  credits={int(c):3d}  throughput={row[100:].mean():.3f} "
+        print(f"  credits={int(c):3d}  throughput={row[cycles // 4:].mean():.3f} "
               f"stores/cycle")
 
 
 if __name__ == "__main__":
-    pattern_sweep_512_cores()
-    oracle_parity_check()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nx", type=int, default=16)
+    ap.add_argument("--ny", type=int, default=32)
+    ap.add_argument("--cycles", type=int, default=800)
+    args = ap.parse_args()
+    pattern_sweep(args.nx, args.ny, args.cycles)
+    backend_parity_check()
     vmapped_credit_sweep()

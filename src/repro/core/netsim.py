@@ -123,6 +123,16 @@ class _Fifos:
     def space(self) -> np.ndarray:
         return self.count < self.depth
 
+    def push_one(self, y: int, x: int, port: int,
+                 pkt: Dict[str, int]) -> None:
+        """Enqueue a single packet at one (tile, port); caller must have
+        verified space.  Scalar path for reactive endpoint injection."""
+        tail = int((self.head[y, x, port] + self.count[y, x, port])
+                   % self.depth)
+        for k in _PKT_FIELDS:
+            self.f[k][y, x, port, tail] = int(pkt[k])
+        self.count[y, x, port] += 1
+
 
 class MeshSim:
     """The full mesh: forward + reverse networks, endpoints, memories."""
@@ -172,6 +182,10 @@ class MeshSim:
         self.measure_start = 0
         self.measure_stop = NO_MEASURE
         self.log: List[Tuple[int, int, int, int, int, int]] = []  # (cycle, sy, sx, op, tag, data)
+        # reactive endpoint injectors, (y, x) -> offer(cycle, credits)
+        # callable returning a Request-shaped object or None; populated by
+        # the repro.mesh.Simulator facade (empty => pure program dynamics)
+        self._injectors: Dict[Tuple[int, int], object] = {}
         ys, xs = np.mgrid[0:ny, 0:nx]
         self._xs, self._ys = xs, ys
 
@@ -405,6 +419,27 @@ class MeshSim:
                                            for k, v in pkt.items()})
                 self.credits -= can_inj.astype(np.int64)
                 self.prog_ptr += can_inj.astype(np.int64)
+
+        # ---- reactive endpoint injection (the mesh-attach interface) ----
+        # Same stage and same valid/ready rule as program injection: the
+        # endpoint is offered the link only when a credit and port-P FIFO
+        # space are available, so a returned packet always injects.
+        # Endpoint tiles have no program entries, so the two paths never
+        # contend for the same FIFO slot.
+        if self._injectors:
+            space_p = self.fwd.space()[..., P]
+            for (y, x), offer in self._injectors.items():
+                if self.credits[y, x] <= 0 or not space_p[y, x]:
+                    continue
+                req = offer(c, int(self.credits[y, x]))
+                if req is None:
+                    continue
+                self.fwd.push_one(y, x, P, {
+                    "dst_x": req.dst_x, "dst_y": req.dst_y,
+                    "src_x": x, "src_y": y, "addr": req.addr,
+                    "data": req.data, "cmp": req.cmp, "op": req.op,
+                    "tag": c})
+                self.credits[y, x] -= 1
 
         # ---- telemetry: FIFO occupancy high-water marks (cycle edge) ----
         np.maximum(self.fifo_hwm_fwd, self.fwd.count, out=self.fifo_hwm_fwd)

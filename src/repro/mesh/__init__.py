@@ -1,0 +1,37 @@
+"""The unified mesh-attach API — one front door for the whole netsim stack.
+
+This package is the reproduction of the paper's *interface* contribution:
+the standardized ``bsg_manycore_link`` attachment point that lets any
+user design plug into the mesh.  It provides
+
+* :class:`MeshConfig` — one configuration subsuming the oracle's
+  ``NetConfig`` and the JAX path's ``SimConfig`` (lossless round-trip
+  converters);
+* :class:`Endpoint` — the per-tile attach protocol (valid/ready forward
+  link via ``offer``, credit-counted reverse link via ``deliver``), with
+  built-ins :class:`ProgramEndpoint`, :class:`DmaEndpoint` and
+  :class:`MemoryControllerEndpoint`;
+* :class:`Simulator` — the backend-agnostic facade (``backend="numpy"``
+  oracle / ``backend="jax"`` jit path) with ``attach`` / ``run`` /
+  ``run_until_drained`` / ``telemetry()``;
+* :class:`Telemetry` — the normalized, backend-bit-identical telemetry
+  record;
+* the traffic-pattern library (``make_traffic`` and friends) emitting
+  injection programs consumable everywhere.
+"""
+from .config import MeshConfig  # noqa: F401
+from .endpoint import (DmaEndpoint, Endpoint,  # noqa: F401
+                       MemoryControllerEndpoint, ProgramEndpoint, Request,
+                       Response, trace_to_program)
+from .simulator import BACKENDS, Simulator  # noqa: F401
+from .telemetry import TELEMETRY_ARRAY_FIELDS, Telemetry  # noqa: F401
+from .traffic import (PATTERNS, PROG_KEYS, bit_complement,  # noqa: F401
+                      empty_program, hotspot, make_traffic,
+                      nearest_neighbor, tornado, transpose, uniform_random)
+
+__all__ = ["MeshConfig", "Simulator", "BACKENDS", "Telemetry",
+           "TELEMETRY_ARRAY_FIELDS", "Endpoint", "Request", "Response",
+           "ProgramEndpoint", "DmaEndpoint", "MemoryControllerEndpoint",
+           "trace_to_program", "PATTERNS", "PROG_KEYS", "empty_program",
+           "make_traffic", "uniform_random", "transpose", "bit_complement",
+           "tornado", "hotspot", "nearest_neighbor"]

@@ -1,0 +1,105 @@
+"""One mesh configuration for every backend.
+
+``MeshConfig`` subsumes the two configuration types that grew up with the
+two simulators — :class:`repro.core.netsim.NetConfig` (the numpy oracle)
+and :class:`repro.netsim_jax.sim.SimConfig` (the JIT path) — so user code
+describes a mesh exactly once and hands it to the backend-agnostic
+:class:`repro.mesh.Simulator`.
+
+Conversions are lossless in both directions with one documented
+exception: ``SimConfig`` has no ``record_log`` field (a per-response
+Python log cannot live inside a jitted state), so
+``MeshConfig -> SimConfig -> MeshConfig`` resets ``record_log`` to
+``False``.  The round-trip property is asserted in
+``tests/test_mesh_api.py``.
+
+The module deliberately does NOT import :mod:`repro.netsim_jax` at import
+time — the JAX stack itself imports :mod:`repro.mesh`, and the facade must
+stay importable on a machine that only wants the numpy oracle.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.netsim import NetConfig
+
+__all__ = ["MeshConfig"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshConfig:
+    """Backend-agnostic mesh description (hashable, usable as a jit static).
+
+    Field names follow the paper's parameters: ``router_fifo`` is the
+    per-direction input-FIFO depth, ``ep_fifo`` is the standard endpoint's
+    ``fifo_els_p``, ``max_out_credits`` is ``max_out_credits_p``.
+    """
+    nx: int
+    ny: int
+    router_fifo: int = 4
+    ep_fifo: int = 4
+    max_out_credits: int = 16
+    mem_words: int = 64
+    resp_latency: int = 1
+    record_log: bool = False      # numpy oracle only; dropped by to_sim()
+
+    def __post_init__(self):
+        if self.nx < 1 or self.ny < 1:
+            raise ValueError(
+                f"mesh dimensions must be positive, got nx={self.nx}, "
+                f"ny={self.ny}")
+
+    # -- NetConfig (numpy oracle) --------------------------------------
+    @classmethod
+    def from_net(cls, cfg: NetConfig) -> "MeshConfig":
+        return cls(nx=cfg.nx, ny=cfg.ny, router_fifo=cfg.router_fifo,
+                   ep_fifo=cfg.ep_fifo, max_out_credits=cfg.max_out_credits,
+                   mem_words=cfg.mem_words, resp_latency=cfg.resp_latency,
+                   record_log=cfg.record_log)
+
+    def to_net(self) -> NetConfig:
+        return NetConfig(nx=self.nx, ny=self.ny, router_fifo=self.router_fifo,
+                         ep_fifo=self.ep_fifo,
+                         max_out_credits=self.max_out_credits,
+                         mem_words=self.mem_words,
+                         resp_latency=self.resp_latency,
+                         record_log=self.record_log)
+
+    # -- SimConfig (JAX backend) ---------------------------------------
+    @classmethod
+    def from_sim(cls, cfg) -> "MeshConfig":
+        """From :class:`repro.netsim_jax.sim.SimConfig` (duck-typed so the
+        JAX stack is not imported just to read a dataclass)."""
+        return cls(nx=cfg.nx, ny=cfg.ny, router_fifo=cfg.router_fifo,
+                   ep_fifo=cfg.ep_fifo, max_out_credits=cfg.max_out_credits,
+                   mem_words=cfg.mem_words, resp_latency=cfg.resp_latency)
+
+    def to_sim(self):
+        """To :class:`repro.netsim_jax.sim.SimConfig` (drops ``record_log``,
+        which has no jit-compatible equivalent)."""
+        from repro.netsim_jax.sim import SimConfig
+        return SimConfig(nx=self.nx, ny=self.ny, router_fifo=self.router_fifo,
+                         ep_fifo=self.ep_fifo,
+                         max_out_credits=self.max_out_credits,
+                         mem_words=self.mem_words,
+                         resp_latency=self.resp_latency)
+
+    # -- normalization -------------------------------------------------
+    @classmethod
+    def coerce(cls, cfg) -> "MeshConfig":
+        """Accept a :class:`MeshConfig`, :class:`NetConfig` or ``SimConfig``
+        and return the equivalent :class:`MeshConfig`."""
+        if isinstance(cfg, cls):
+            return cfg
+        if isinstance(cfg, NetConfig):
+            return cls.from_net(cfg)
+        if all(hasattr(cfg, f) for f in
+               ("nx", "ny", "router_fifo", "ep_fifo", "max_out_credits",
+                "mem_words", "resp_latency")):
+            return cls.from_sim(cfg)
+        raise TypeError(
+            f"cannot interpret {type(cfg).__name__} as a mesh configuration; "
+            "pass a MeshConfig, NetConfig or SimConfig")
+
+    def replace(self, **kw) -> "MeshConfig":
+        return dataclasses.replace(self, **kw)

@@ -1,0 +1,78 @@
+"""The unified telemetry record of a mesh simulation.
+
+Both backends accumulate the same cycle-exact counters (numpy attributes
+on :class:`repro.core.netsim.MeshSim`, ``SimState`` fields on the JAX
+path); :class:`Telemetry` is the one normalized view —
+``Simulator.telemetry()`` returns it with every field as int64 numpy, so
+results are **bit-identical across backends** and directly comparable
+(the parity suites assert exactly that).
+
+``out_of_credit_cycles`` is deliberately NOT part of the record: it
+counts cycles where a tile had *pending but unissuable* work, which is
+well defined for injection programs but not observable for reactive
+endpoints (the simulator cannot know whether an endpoint "would have"
+offered), so it cannot be made backend-identical for bridged endpoint
+runs.  It stays available on the program path via the backend object.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["Telemetry", "TELEMETRY_ARRAY_FIELDS"]
+
+TELEMETRY_ARRAY_FIELDS = ("completed", "lat_sum", "completed_per_cycle",
+                          "link_util_fwd", "link_util_rev",
+                          "fifo_hwm_fwd", "fifo_hwm_rev", "ep_hwm",
+                          "lat_hist")
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Telemetry:
+    """Normalized simulation telemetry (all arrays int64 numpy)."""
+
+    cycles: int                        # total cycles simulated
+    completed: np.ndarray              # (ny, nx) responses received per tile
+    lat_sum: np.ndarray                # (ny, nx) summed round-trip latency
+    completed_per_cycle: np.ndarray    # (cycles,) completion trace
+    link_util_fwd: np.ndarray          # (ny, nx, 5) pkts out of each port
+    link_util_rev: np.ndarray          # (ny, nx, 5)
+    fifo_hwm_fwd: np.ndarray           # (ny, nx, 5) FIFO occupancy HWMs
+    fifo_hwm_rev: np.ndarray           # (ny, nx, 5)
+    ep_hwm: np.ndarray                 # (ny, nx) endpoint-FIFO HWM
+    lat_hist: np.ndarray               # (LAT_BINS,) RTT histogram (windowed)
+
+    @classmethod
+    def of(cls, sim) -> "Telemetry":
+        """Build from anything oracle-shaped (``MeshSim``, ``JaxMeshSim``
+        or the :class:`repro.mesh.Simulator` facade)."""
+        return cls(cycles=int(sim.cycle),
+                   **{f: np.asarray(getattr(sim, f), dtype=np.int64)
+                      for f in TELEMETRY_ARRAY_FIELDS})
+
+    def assert_bit_identical(self, other: "Telemetry") -> None:
+        """Assert exact equality of every field (the cross-backend
+        contract); raises AssertionError naming the first mismatch."""
+        assert self.cycles == other.cycles, \
+            f"telemetry mismatch: cycles {self.cycles} != {other.cycles}"
+        for f in TELEMETRY_ARRAY_FIELDS:
+            np.testing.assert_array_equal(getattr(self, f),
+                                          getattr(other, f),
+                                          err_msg=f"telemetry mismatch: {f}")
+
+    def __eq__(self, other) -> bool:
+        if not isinstance(other, Telemetry):
+            return NotImplemented
+        return self.cycles == other.cycles and all(
+            np.array_equal(getattr(self, f), getattr(other, f))
+            for f in TELEMETRY_ARRAY_FIELDS)
+
+    # quick derived views -----------------------------------------------
+    def mean_latency(self) -> float:
+        done = int(self.completed.sum())
+        return float(self.lat_sum.sum()) / max(done, 1)
+
+    def throughput(self, warmup: int = 0) -> float:
+        per = self.completed_per_cycle[warmup:]
+        return float(per.sum()) / max(len(per), 1)

@@ -2,9 +2,13 @@
 
 * :mod:`repro.netsim_jax.sim`     — the ``lax.scan`` cycle-level simulator
   (semantics validated cycle-for-cycle against ``repro.core.netsim.MeshSim``)
-* :mod:`repro.netsim_jax.traffic` — synthetic traffic patterns (uniform,
-  transpose, bit-complement, tornado, hotspot, nearest-neighbor) emitting
-  injection programs consumable by both simulators
+* :mod:`repro.netsim_jax.traffic` — deprecated re-export of the traffic
+  library, whose canonical home is now :mod:`repro.mesh.traffic`
+
+Prefer the backend-agnostic front door :mod:`repro.mesh`
+(``MeshConfig`` / ``Simulator`` / ``Endpoint`` / ``Telemetry``) for new
+code; this package remains the functional JAX layer it drives
+(``simulate`` / ``vmap`` sweeps / ``measure``).
 * :mod:`repro.netsim_jax.measure` — the phased warmup/measure/drain
   load–latency methodology over the per-link/per-packet telemetry, and
   the ``vmap``-ed saturation-curve sweep driver

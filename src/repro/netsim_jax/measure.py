@@ -40,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.netsim import LAT_BINS
+from repro.mesh.config import MeshConfig
 from .sim import Program, SimConfig, SimState, init_state, load_program, simulate
 from .traffic import make_traffic
 
@@ -58,10 +59,18 @@ DEFAULT_SWEEP_RATES = (0.02, 0.05, 0.1, 0.15, 0.2, 0.25, 0.3, 0.35,
                        0.4, 0.45, 0.5, 0.55)
 
 
-def sweep_config(nx: int, ny: int) -> SimConfig:
+def sweep_config(nx: int, ny: int) -> MeshConfig:
     """Mesh configuration for saturation sweeps: buffering deep enough
     that flow control, not storage, is the limit."""
-    return SimConfig(nx=nx, ny=ny, max_out_credits=128, router_fifo=16)
+    return MeshConfig(nx=nx, ny=ny, max_out_credits=128, router_fifo=16)
+
+
+def _as_simconfig(cfg) -> SimConfig:
+    """Public measure entry points take any config flavor (MeshConfig,
+    NetConfig, SimConfig); the jitted internals want SimConfig."""
+    if isinstance(cfg, SimConfig):
+        return cfg
+    return MeshConfig.coerce(cfg).to_sim()
 
 F32 = jnp.float32
 
@@ -131,11 +140,13 @@ def phased_stats(cfg: SimConfig, prog: Program, state: SimState,
     )
 
 
-def measure_program(cfg: SimConfig, entries: Dict[str, np.ndarray], *,
+def measure_program(cfg, entries: Dict[str, np.ndarray], *,
                     warmup: int = 200, measure: int = 400,
                     drain: int = 400) -> Dict[str, float]:
     """Convenience: phased measurement of one injection program; returns
-    plain-python stats (``hist`` as a numpy array)."""
+    plain-python stats (``hist`` as a numpy array).  ``cfg`` may be a
+    MeshConfig, NetConfig or SimConfig."""
+    cfg = _as_simconfig(cfg)
     stats = phased_stats(cfg, load_program(entries), init_state(cfg),
                          warmup, measure, drain)
     out = {k: float(v) for k, v in stats._asdict().items() if k != "hist"}
@@ -214,15 +225,15 @@ def curve_record(out: Dict[str, object]) -> Dict[str, object]:
 def load_latency_sweep(pattern: str, nx: int, ny: int,
                        rates: Sequence[float], *,
                        warmup: int = 200, measure: int = 400,
-                       drain: int = 400, cfg: Optional[SimConfig] = None,
+                       drain: int = 400, cfg=None,
                        **traffic_kw) -> Dict[str, object]:
     """Full load–latency saturation curve for one traffic pattern: the
     phased measurement ``vmap``-ed over offered loads in a single XLA
     program.  Returns numpy arrays keyed like :class:`PhaseStats`, plus
-    the rate grid, zero-load latency, and the located saturation point."""
+    the rate grid, zero-load latency, and the located saturation point.
+    ``cfg`` may be a MeshConfig, NetConfig or SimConfig."""
     rates = sorted(float(r) for r in rates)
-    if cfg is None:
-        cfg = SimConfig(nx=nx, ny=ny)
+    cfg = SimConfig(nx=nx, ny=ny) if cfg is None else _as_simconfig(cfg)
     horizon = warmup + measure + drain
     progs = stack_rate_programs(pattern, nx, ny, rates, horizon, **traffic_kw)
     stats = jax.vmap(

@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -73,16 +74,32 @@ class SimConfig:
 
     @classmethod
     def from_netconfig(cls, cfg: NetConfig) -> "SimConfig":
-        return cls(nx=cfg.nx, ny=cfg.ny, router_fifo=cfg.router_fifo,
-                   ep_fifo=cfg.ep_fifo, max_out_credits=cfg.max_out_credits,
-                   mem_words=cfg.mem_words, resp_latency=cfg.resp_latency)
+        """Deprecated shim — route conversions through
+        :class:`repro.mesh.MeshConfig` (``MeshConfig.from_net(cfg).to_sim()``)."""
+        warnings.warn(
+            "SimConfig.from_netconfig is deprecated; use "
+            "repro.mesh.MeshConfig.from_net(cfg).to_sim()",
+            DeprecationWarning, stacklevel=2)
+        return _simconfig_from_net(cfg)
 
     def to_netconfig(self, **kw) -> NetConfig:
+        """Deprecated shim — route conversions through
+        :class:`repro.mesh.MeshConfig` (``MeshConfig.from_sim(cfg).to_net()``)."""
+        warnings.warn(
+            "SimConfig.to_netconfig is deprecated; use "
+            "repro.mesh.MeshConfig.from_sim(cfg).to_net()",
+            DeprecationWarning, stacklevel=2)
         return NetConfig(nx=self.nx, ny=self.ny, router_fifo=self.router_fifo,
                          ep_fifo=self.ep_fifo,
                          max_out_credits=self.max_out_credits,
                          mem_words=self.mem_words,
                          resp_latency=self.resp_latency, **kw)
+
+
+def _simconfig_from_net(cfg: NetConfig) -> "SimConfig":
+    return SimConfig(nx=cfg.nx, ny=cfg.ny, router_fifo=cfg.router_fifo,
+                     ep_fifo=cfg.ep_fifo, max_out_credits=cfg.max_out_credits,
+                     mem_words=cfg.mem_words, resp_latency=cfg.resp_latency)
 
 
 class Fifo(NamedTuple):
@@ -198,10 +215,19 @@ def load_program(entries: Dict[str, np.ndarray]) -> Program:
                    length=jnp.asarray((op >= 0).sum(-1), I32))
 
 
-def empty_program_for(cfg: SimConfig) -> Program:
-    """A no-op program (nothing to inject)."""
+def _empty_program_for(cfg: SimConfig) -> Program:
     return Program(buf=jnp.full((len(PROG_FIELDS), cfg.ny, cfg.nx, 1), -1, I32),
                    length=jnp.zeros((cfg.ny, cfg.nx), I32))
+
+
+def empty_program_for(cfg: SimConfig) -> Program:
+    """Deprecated — ``load_program(repro.mesh.empty_program(nx, ny, 1))``
+    (or simply don't load anything: a fresh state injects nothing)."""
+    warnings.warn(
+        "empty_program_for is deprecated; build programs with "
+        "repro.mesh.empty_program and pack them with load_program",
+        DeprecationWarning, stacklevel=2)
+    return _empty_program_for(cfg)
 
 
 # ----------------------------------------------------------------------
@@ -558,12 +584,13 @@ class JaxMeshSim:
     """
 
     def __init__(self, cfg, fifo_depth=None, max_credits=None):
-        if isinstance(cfg, NetConfig):
-            cfg = SimConfig.from_netconfig(cfg)
+        if not isinstance(cfg, SimConfig):
+            # NetConfig / repro.mesh.MeshConfig share the field names
+            cfg = _simconfig_from_net(cfg)
         self.cfg = cfg
         self.state = init_state(cfg, fifo_depth=fifo_depth,
                                 max_credits=max_credits)
-        self.program = empty_program_for(cfg)
+        self.program = _empty_program_for(cfg)
         self.completed_per_cycle: list = []
 
     def load_program(self, entries: Dict[str, np.ndarray]) -> None:

@@ -5,27 +5,37 @@ vs the numpy oracle (`repro.core.netsim.MeshSim`) — memory, statistics,
 per-cycle completion traces, and every telemetry counter.  The assertion
 lives here (not in a test module) so the parity suite, the property
 fuzz, and any downstream user can share one definition of "equal".
+
+The telemetry half of the contract is now expressed through the unified
+:class:`repro.mesh.Telemetry` record, so any pair of oracle-shaped
+objects — raw ``MeshSim`` / ``JaxMeshSim`` or two
+:class:`repro.mesh.Simulator` facades on different backends — compares
+with the same code path users have.
 """
 from __future__ import annotations
 
 import numpy as np
 
-__all__ = ["TELEMETRY_FIELDS", "assert_state_equal"]
+from repro.mesh.telemetry import Telemetry
+
+__all__ = ["TELEMETRY_FIELDS", "assert_state_equal", "assert_telemetry_equal"]
 
 TELEMETRY_FIELDS = ("link_util_fwd", "link_util_rev", "fifo_hwm_fwd",
                     "fifo_hwm_rev", "ep_hwm", "lat_hist")
+
+
+def assert_telemetry_equal(a, b) -> None:
+    """Assert the unified telemetry records of two simulators (or
+    facades) are bit-identical."""
+    Telemetry.of(a).assert_bit_identical(Telemetry.of(b))
 
 
 def assert_state_equal(a, b) -> None:
     """Assert the oracle ``a`` and JAX sim ``b`` agree on all externally
     visible state: memory, stats, completion trace, telemetry."""
     np.testing.assert_array_equal(a.mem, b.mem)
-    np.testing.assert_array_equal(a.completed, b.completed)
-    np.testing.assert_array_equal(a.lat_sum, b.lat_sum)
     np.testing.assert_array_equal(a.credits, b.credits)
     np.testing.assert_array_equal(a.out_of_credit_cycles,
                                   b.out_of_credit_cycles)
-    assert a.completed_per_cycle == b.completed_per_cycle
-    for f in TELEMETRY_FIELDS:
-        np.testing.assert_array_equal(getattr(a, f), getattr(b, f),
-                                      err_msg=f"telemetry mismatch: {f}")
+    assert list(a.completed_per_cycle) == list(b.completed_per_cycle)
+    assert_telemetry_equal(a, b)

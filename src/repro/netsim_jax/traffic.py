@@ -1,164 +1,31 @@
-"""Synthetic traffic-pattern workload library for the mesh simulators.
+"""Deprecated location — the traffic library lives in :mod:`repro.mesh.traffic`.
 
-Standard NoC evaluation battery (the patterns used by the Epiphany-V and
-Ring-Mesh evaluations, and by Dally & Towles): uniform random, transpose,
-bit-complement, tornado, hotspot, nearest-neighbor.  Every generator
-returns an *injection program* — a dict of ``(ny, nx, length)`` int64
-arrays with the exact schema of ``MeshSim.load_program`` — so one program
-drives **both** the numpy oracle (:class:`repro.core.netsim.MeshSim`) and
-the JAX simulator (:class:`repro.netsim_jax.JaxMeshSim`) bit-identically.
-
-The injection *rate* r (packets/cycle/tile, 0 < r <= 1) is enforced with
-the ``not_before`` field: entry ``i`` may not inject before cycle
-``floor(i / r)``.  Offered load is open-loop up to the credit limit; the
-endpoints' credit flow control then back-pressures naturally, exactly as
-in hardware.
+Everything re-exports unchanged so existing imports keep working;
+``empty_program`` additionally warns, since it was duplicated against
+``repro.netsim_jax.sim.empty_program_for`` and both are now one helper
+on the facade (``repro.mesh.empty_program``).
 """
 from __future__ import annotations
 
-import math
-from typing import Callable, Dict, Optional, Tuple
+import warnings
+from typing import Dict
 
 import numpy as np
 
-from repro.core.netsim import OP_LOAD, OP_STORE
+from repro.mesh.traffic import (PATTERNS, PROG_KEYS,  # noqa: F401
+                                bit_complement, hotspot, make_traffic,
+                                nearest_neighbor, tornado, transpose,
+                                uniform_random)
+from repro.mesh.traffic import empty_program as _empty_program
 
-__all__ = ["PATTERNS", "empty_program", "make_traffic",
+__all__ = ["PATTERNS", "PROG_KEYS", "empty_program", "make_traffic",
            "uniform_random", "transpose", "bit_complement", "tornado",
            "hotspot", "nearest_neighbor"]
 
-PROG_KEYS = ("dst_x", "dst_y", "addr", "data", "cmp", "op", "not_before")
 
-
-def empty_program(nx: int, ny: int, length: int) -> Dict[str, np.ndarray]:
-    """All-padding program (``op`` = -1 everywhere); arrays are
-    (ny, nx, length) as the simulators expect."""
-    prog = {k: np.zeros((ny, nx, length), np.int64) for k in PROG_KEYS}
-    prog["op"][:] = -1
-    return prog
-
-
-def _base(nx: int, ny: int, length: int, rate: float, op: int,
-          mem_words: int, seed: int) -> Tuple[Dict[str, np.ndarray],
-                                              np.random.Generator]:
-    if not 0.0 < rate <= 1.0:
-        raise ValueError(
-            f"injection rate must be in (0, 1] packets/cycle/tile, "
-            f"got {rate}")
-    prog = empty_program(nx, ny, length)
-    i = np.arange(length)
-    prog["op"][:] = op
-    prog["addr"][:] = i % mem_words
-    prog["data"][:] = np.arange(ny * nx * length).reshape(ny, nx, length)
-    prog["not_before"][:] = np.floor(i / rate).astype(np.int64)
-    return prog, np.random.default_rng(seed)
-
-
-# ----------------------------------------------------------------------
-# the patterns: each fills dst_x / dst_y of a base program
-# ----------------------------------------------------------------------
-def uniform_random(nx: int, ny: int, length: int, *, rate: float = 1.0,
-                   op: int = OP_STORE, mem_words: int = 64,
-                   seed: int = 0) -> Dict[str, np.ndarray]:
-    """Every packet targets a uniformly random *other* tile."""
-    prog, rng = _base(nx, ny, length, rate, op, mem_words, seed)
-    n = ny * nx
-    src = np.arange(n).reshape(ny, nx, 1)
-    # uniform over the n-1 other tiles: src + U[1, n) mod n is never self
-    dst = (src + rng.integers(1, n, (ny, nx, length))) % n
-    prog["dst_y"], prog["dst_x"] = np.divmod(dst, nx)
-    return prog
-
-
-def transpose(nx: int, ny: int, length: int, *, rate: float = 1.0,
-              op: int = OP_STORE, mem_words: int = 64,
-              seed: int = 0) -> Dict[str, np.ndarray]:
-    """(x, y) -> (y, x).  Only defined on square meshes — on a non-square
-    mesh the transposed coordinate falls off the array."""
-    if nx != ny:
-        raise ValueError(
-            f"transpose traffic is undefined on a non-square mesh "
-            f"(got nx={nx}, ny={ny}); use a square mesh or another pattern")
-    prog, _ = _base(nx, ny, length, rate, op, mem_words, seed)
-    ys, xs = np.mgrid[0:ny, 0:nx]
-    prog["dst_x"][:] = ys[..., None]
-    prog["dst_y"][:] = xs[..., None]
-    return prog
-
-
-def bit_complement(nx: int, ny: int, length: int, *, rate: float = 1.0,
-                   op: int = OP_STORE, mem_words: int = 64,
-                   seed: int = 0) -> Dict[str, np.ndarray]:
-    """(x, y) -> (nx-1-x, ny-1-y): every packet crosses both bisections."""
-    prog, _ = _base(nx, ny, length, rate, op, mem_words, seed)
-    ys, xs = np.mgrid[0:ny, 0:nx]
-    prog["dst_x"][:] = (nx - 1 - xs)[..., None]
-    prog["dst_y"][:] = (ny - 1 - ys)[..., None]
-    return prog
-
-
-def tornado(nx: int, ny: int, length: int, *, rate: float = 1.0,
-            op: int = OP_STORE, mem_words: int = 64,
-            seed: int = 0) -> Dict[str, np.ndarray]:
-    """Each dimension shifts by ceil(k/2) - 1 — the adversarial near-half-way
-    offset (Dally & Towles §3.2)."""
-    prog, _ = _base(nx, ny, length, rate, op, mem_words, seed)
-    ys, xs = np.mgrid[0:ny, 0:nx]
-    prog["dst_x"][:] = ((xs + max(math.ceil(nx / 2) - 1, 0)) % nx)[..., None]
-    prog["dst_y"][:] = ((ys + max(math.ceil(ny / 2) - 1, 0)) % ny)[..., None]
-    return prog
-
-
-def hotspot(nx: int, ny: int, length: int, *, rate: float = 1.0,
-            op: int = OP_STORE, mem_words: int = 64, seed: int = 0,
-            spot: Optional[Tuple[int, int]] = None,
-            fraction: float = 0.5) -> Dict[str, np.ndarray]:
-    """A ``fraction`` of packets hammer one hot tile (default: the center);
-    the rest are uniform random over the other tiles."""
-    prog, rng = _base(nx, ny, length, rate, op, mem_words, seed)
-    uni = uniform_random(nx, ny, length, rate=rate, op=op,
-                         mem_words=mem_words, seed=seed + 1)
-    hx, hy = spot if spot is not None else (nx // 2, ny // 2)
-    hot = rng.random((ny, nx, length)) < fraction
-    prog["dst_x"] = np.where(hot, hx, uni["dst_x"])
-    prog["dst_y"] = np.where(hot, hy, uni["dst_y"])
-    return prog
-
-
-def nearest_neighbor(nx: int, ny: int, length: int, *, rate: float = 1.0,
-                     op: int = OP_STORE, mem_words: int = 64,
-                     seed: int = 0) -> Dict[str, np.ndarray]:
-    """Each tile streams to its east neighbour (wrapping at the edge) — the
-    paper's line-rate one-to-one pattern at array scale."""
-    prog, _ = _base(nx, ny, length, rate, op, mem_words, seed)
-    ys, xs = np.mgrid[0:ny, 0:nx]
-    prog["dst_x"][:] = ((xs + 1) % nx)[..., None]
-    prog["dst_y"][:] = ys[..., None]
-    return prog
-
-
-PATTERNS: Dict[str, Callable[..., Dict[str, np.ndarray]]] = {
-    "uniform": uniform_random,
-    "transpose": transpose,
-    "bit_complement": bit_complement,
-    "tornado": tornado,
-    "hotspot": hotspot,
-    "neighbor": nearest_neighbor,
-}
-
-
-def make_traffic(pattern: str, nx: int, ny: int, length: int,
-                 **kw) -> Dict[str, np.ndarray]:
-    """Dispatch by pattern name (see :data:`PATTERNS`); keyword arguments
-    are forwarded to the generator (``rate``, ``op``, ``seed``, ...).
-
-    Raises :class:`ValueError` for unknown patterns, an injection rate
-    outside ``(0, 1]``, or a mesh on which the pattern is undefined
-    (e.g. transpose on a non-square mesh).
-    """
-    try:
-        fn = PATTERNS[pattern]
-    except KeyError:
-        raise ValueError(
-            f"unknown pattern {pattern!r}; known: {sorted(PATTERNS)}") from None
-    return fn(nx, ny, length, **kw)
+def empty_program(nx: int, ny: int, length: int = 1) -> Dict[str, np.ndarray]:
+    """Deprecated alias of :func:`repro.mesh.empty_program`."""
+    warnings.warn(
+        "repro.netsim_jax.traffic.empty_program is deprecated; use "
+        "repro.mesh.empty_program", DeprecationWarning, stacklevel=2)
+    return _empty_program(nx, ny, length)

@@ -14,12 +14,11 @@ measurement methodology (repro.netsim_jax.measure).
 import numpy as np
 import pytest
 
-from repro.core.netsim import (LAT_BINS, MeshSim, NetConfig, OP_LOAD,
-                               unloaded_rtt)
-from repro.netsim_jax import (JaxMeshSim, SimConfig, curve_is_monotone,
-                              empty_program, hist_quantile,
-                              load_latency_sweep, make_traffic,
-                              measure_program, saturation_point)
+from repro.core.netsim import LAT_BINS, MeshSim, NetConfig, OP_LOAD, unloaded_rtt
+from repro.mesh import MeshConfig, Simulator, empty_program, make_traffic
+from repro.netsim_jax import (curve_is_monotone, hist_quantile,
+                              load_latency_sweep, measure_program,
+                              saturation_point)
 
 NX, NY = 7, 2          # one mesh shape for all hop counts: one XLA compile
 RUN_CYCLES = unloaded_rtt(6) + 5
@@ -33,35 +32,35 @@ def _single_packet_prog(hops):
     return prog
 
 
-@pytest.mark.parametrize("sim_cls", [MeshSim, JaxMeshSim],
-                         ids=["oracle", "jax"])
-def test_zero_load_latency_matches_analytic(sim_cls):
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_zero_load_latency_matches_analytic(backend):
     """One packet on an idle mesh: the telemetry histogram holds exactly
     one sample, in the bin ``unloaded_rtt(hops)``, for hops 1..6."""
     for hops in range(1, 7):
-        sim = sim_cls(NetConfig(nx=NX, ny=NY))
-        sim.load_program(_single_packet_prog(hops))
+        sim = Simulator(MeshConfig(nx=NX, ny=NY), backend=backend)
+        sim.attach(_single_packet_prog(hops))
         sim.run(RUN_CYCLES)
-        assert int(sim.completed[0, 0]) == 1
+        t = sim.telemetry()
+        assert int(t.completed[0, 0]) == 1
         expect = np.zeros(LAT_BINS, np.int64)
         expect[unloaded_rtt(hops)] = 1
-        np.testing.assert_array_equal(sim.lat_hist, expect)
+        np.testing.assert_array_equal(t.lat_hist, expect)
         # the request crossed exactly `hops` forward links + 1 ejection,
         # and the response the same coming back
-        assert int(sim.link_util_fwd.sum()) == hops + 1
-        assert int(sim.link_util_rev.sum()) == hops + 1
+        assert int(t.link_util_fwd.sum()) == hops + 1
+        assert int(t.link_util_rev.sum()) == hops + 1
 
 
-@pytest.mark.parametrize("sim_cls", [MeshSim, JaxMeshSim],
-                         ids=["oracle", "jax"])
-def test_idle_mesh_zero_utilization(sim_cls):
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_idle_mesh_zero_utilization(backend):
     """No program -> every telemetry counter stays exactly 0."""
-    sim = sim_cls(NetConfig(nx=4, ny=3))
-    sim.load_program(empty_program(4, 3, 1))
+    sim = Simulator(MeshConfig(nx=4, ny=3), backend=backend)
+    sim.attach(empty_program(4, 3, 1))
     sim.run(50)
+    t = sim.telemetry()
     for f in ("link_util_fwd", "link_util_rev", "fifo_hwm_fwd",
               "fifo_hwm_rev", "ep_hwm", "lat_hist"):
-        assert int(getattr(sim, f).sum()) == 0, f"{f} nonzero on idle mesh"
+        assert int(getattr(t, f).sum()) == 0, f"{f} nonzero on idle mesh"
 
 
 def test_oracle_histogram_consistent_with_response_log():
@@ -122,7 +121,7 @@ def test_saturation_point_and_monotone():
 def test_phased_measure_low_load_is_clean():
     """Well below saturation: accepted == offered == the injection rate,
     latency ~ zero-load, and every window packet is delivered."""
-    cfg = SimConfig(nx=4, ny=4, max_out_credits=32)
+    cfg = MeshConfig(nx=4, ny=4, max_out_credits=32)
     entries = make_traffic("uniform", 4, 4, 200, rate=0.1, seed=0)
     stats = measure_program(cfg, entries, warmup=100, measure=200,
                             drain=200)
@@ -139,7 +138,7 @@ def test_phased_measure_low_load_is_clean():
 def test_load_latency_sweep_monotone_and_saturates():
     """Small vmapped sweep: latency rises monotonically with offered load
     and crosses the saturation threshold at high load."""
-    cfg = SimConfig(nx=4, ny=4, max_out_credits=64, router_fifo=8)
+    cfg = MeshConfig(nx=4, ny=4, max_out_credits=64, router_fifo=8)
     out = load_latency_sweep("transpose", 4, 4, [0.05, 0.3, 0.6, 1.0],
                              warmup=100, measure=250, drain=300, cfg=cfg,
                              seed=0)

@@ -1,0 +1,368 @@
+"""The unified mesh-attach API: config round-trips, facade semantics,
+deprecation shims, and the endpoint telemetry-parity contract.
+
+* ``MeshConfig`` <-> ``NetConfig``/``SimConfig`` conversion is lossless
+  (corpus + hypothesis property test);
+* the facade's reactive path is cycle-identical to the native program
+  path (``ProgramEndpoint`` grid == ``attach(program)``);
+* a fuzzed corpus of reactive endpoint scenarios produces bit-identical
+  :class:`repro.mesh.Telemetry` between the numpy backend (native
+  execution) and the JAX backend (trace-to-program bridge);
+* the deduplicated ``empty_program`` helper and the deprecated old names;
+* ``benchmarks/run.py`` exits nonzero when a suite crashes.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.netsim import NetConfig, OP_LOAD, OP_STORE
+from repro.mesh import (DmaEndpoint, MemoryControllerEndpoint, MeshConfig,
+                        ProgramEndpoint, Simulator, empty_program,
+                        make_traffic, trace_to_program)
+from repro.netsim_jax.sim import SimConfig
+from repro.netsim_jax.testing import assert_telemetry_equal
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+    def given(*_a, **_k):
+        return lambda f: pytest.mark.skip(
+            reason="hypothesis not installed")(f)
+
+    def settings(*_a, **_k):
+        return lambda f: f
+
+    class st:  # noqa: N801 — placeholder strategies, never evaluated
+        @staticmethod
+        def integers(*_a, **_k):
+            return None
+
+        @staticmethod
+        def booleans(*_a, **_k):
+            return None
+
+
+# ----------------------------------------------------------------------
+# MeshConfig round trips
+# ----------------------------------------------------------------------
+def _roundtrip_case(nx, ny, fifo, ep_fifo, credits, mem_words, resp_latency,
+                    record_log):
+    cfg = MeshConfig(nx=nx, ny=ny, router_fifo=fifo, ep_fifo=ep_fifo,
+                     max_out_credits=credits, mem_words=mem_words,
+                     resp_latency=resp_latency, record_log=record_log)
+    # MeshConfig <-> NetConfig: lossless in both directions
+    assert MeshConfig.from_net(cfg.to_net()) == cfg
+    # MeshConfig <-> SimConfig: lossless except record_log (documented:
+    # the jitted state cannot carry a Python response log)
+    back = MeshConfig.from_sim(cfg.to_sim())
+    assert back == cfg.replace(record_log=False)
+    # the old configs round-trip through MeshConfig losslessly
+    net = cfg.to_net()
+    assert MeshConfig.from_net(net).to_net() == net
+    sim = cfg.to_sim()
+    assert MeshConfig.from_sim(sim).to_sim() == sim
+    # coerce accepts all three spellings and lands on the same value
+    assert MeshConfig.coerce(cfg) is cfg
+    assert MeshConfig.coerce(net) == cfg
+    assert MeshConfig.coerce(sim) == cfg.replace(record_log=False)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_config_roundtrip_corpus(seed):
+    rng = np.random.default_rng(3000 + seed)
+    _roundtrip_case(nx=int(rng.integers(1, 33)), ny=int(rng.integers(1, 33)),
+                    fifo=int(rng.integers(1, 17)),
+                    ep_fifo=int(rng.integers(1, 17)),
+                    credits=int(rng.integers(1, 129)),
+                    mem_words=int(rng.integers(1, 257)),
+                    resp_latency=int(rng.integers(1, 4)),
+                    record_log=bool(rng.integers(0, 2)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 64), st.integers(1, 32),
+       st.integers(1, 32), st.integers(1, 256), st.integers(1, 512),
+       st.integers(1, 4), st.booleans())
+def test_config_roundtrip_hypothesis(nx, ny, fifo, ep_fifo, credits,
+                                     mem_words, resp_latency, record_log):
+    _roundtrip_case(nx, ny, fifo, ep_fifo, credits, mem_words, resp_latency,
+                    record_log)
+
+
+def test_config_validation_and_coerce_errors():
+    with pytest.raises(ValueError, match="dimensions must be positive"):
+        MeshConfig(nx=0, ny=4)
+    with pytest.raises(TypeError, match="cannot interpret"):
+        MeshConfig.coerce("4x4")
+
+
+# ----------------------------------------------------------------------
+# deprecated shims + the deduplicated empty-program helper
+# ----------------------------------------------------------------------
+def test_empty_program_old_names_deprecated_but_equivalent():
+    import repro.netsim_jax.traffic as old_traffic
+    from repro.netsim_jax import sim as jsim
+
+    canonical = empty_program(3, 2, 4)
+    with pytest.warns(DeprecationWarning, match="repro.mesh.empty_program"):
+        legacy = old_traffic.empty_program(3, 2, 4)
+    assert sorted(legacy) == sorted(canonical)
+    for k in canonical:
+        np.testing.assert_array_equal(legacy[k], canonical[k])
+
+    cfg = SimConfig(nx=3, ny=2)
+    with pytest.warns(DeprecationWarning, match="empty_program_for"):
+        prog = jsim.empty_program_for(cfg)
+    assert int(np.asarray(prog.length).sum()) == 0
+    # the jitted twin of the canonical helper packs to the same no-op
+    packed = jsim.load_program(empty_program(3, 2, 1))
+    np.testing.assert_array_equal(np.asarray(packed.length),
+                                  np.asarray(prog.length))
+
+
+def test_simconfig_converters_deprecated():
+    net = NetConfig(nx=5, ny=3, router_fifo=2)
+    with pytest.warns(DeprecationWarning, match="MeshConfig.from_net"):
+        scfg = SimConfig.from_netconfig(net)
+    assert scfg == MeshConfig.from_net(net).to_sim()
+    with pytest.warns(DeprecationWarning, match="MeshConfig.from_sim"):
+        back = scfg.to_netconfig()
+    assert back == MeshConfig.from_sim(scfg).to_net()
+
+
+# ----------------------------------------------------------------------
+# facade semantics
+# ----------------------------------------------------------------------
+def test_facade_rejects_bad_attachments():
+    sim = Simulator(MeshConfig(nx=3, ny=3))
+    with pytest.raises(ValueError, match="unknown backend"):
+        Simulator(MeshConfig(nx=2, ny=2), backend="torch")
+    with pytest.raises(TypeError, match="cannot attach"):
+        sim.attach(42)
+    ep = DmaEndpoint(dst_x=1, dst_y=1, data=[1])
+    with pytest.raises(ValueError, match="needs its tile"):
+        sim.attach(ep)
+    with pytest.raises(ValueError, match="outside the"):
+        sim.attach(ep, at=(3, 0))
+    sim.attach(ep, at=(0, 0))
+    with pytest.raises(ValueError, match="one master"):
+        sim.attach(DmaEndpoint(dst_x=1, dst_y=1, data=[1]), at=(0, 0))
+    # a program with entries on the endpoint's tile is rejected too
+    prog = make_traffic("uniform", 3, 3, 2, seed=0)
+    with pytest.raises(ValueError, match="one master"):
+        sim.attach(prog)
+
+
+def test_facade_program_accepts_netconfig_and_simconfig():
+    """The facade front door takes any config flavor."""
+    entries = make_traffic("neighbor", 3, 2, 3)
+    for cfg in (NetConfig(nx=3, ny=2), SimConfig(nx=3, ny=2),
+                MeshConfig(nx=3, ny=2)):
+        sim = Simulator(cfg, backend="numpy")
+        sim.attach({k: v.copy() for k, v in entries.items()})
+        sim.run_until_drained()
+        assert int(sim.completed.sum()) == 3 * 2 * 3
+
+
+def test_program_endpoint_grid_matches_native_program_path():
+    """Driving a whole injection program through per-tile ProgramEndpoints
+    (the reactive valid/ready interface) is cycle-identical to the native
+    vectorized program path — injection is the same stage, same rules."""
+    cfg = MeshConfig(nx=4, ny=3, max_out_credits=3, router_fifo=2)
+    entries = make_traffic("uniform", 4, 3, 7, rate=0.6, seed=13)
+
+    native = Simulator(cfg, backend="numpy")
+    native.attach({k: v.copy() for k, v in entries.items()})
+    reactive = Simulator(cfg, backend="numpy")
+    for (x, y), ep in ProgramEndpoint.grid(entries).items():
+        reactive.attach(ep, at=(x, y))
+
+    cn = native.run_until_drained()
+    cr = reactive.run_until_drained()
+    assert cn == cr
+    assert_telemetry_equal(native, reactive)
+    np.testing.assert_array_equal(native.mem, reactive.mem)
+    np.testing.assert_array_equal(native.credits, reactive.credits)
+
+
+def test_trace_program_replays_bit_identically_on_the_oracle():
+    """The exported injection-trace program reproduces a reactive run on
+    a fresh simulator — the bridge invariant, checked oracle-vs-oracle."""
+    cfg = MeshConfig(nx=4, ny=4, mem_words=16)
+    live = Simulator(cfg, backend="numpy", seed=0)
+    live.attach(DmaEndpoint(dst_x=3, dst_y=3, data=range(8),
+                            max_inflight=2), at=(0, 0))
+    live.run_until_drained()
+
+    replay = Simulator(cfg, backend="numpy", seed=0)
+    replay.attach(live.injection_trace_program())
+    replay.run_until_drained()
+    assert_telemetry_equal(live, replay)
+    np.testing.assert_array_equal(live.mem, replay.mem)
+
+
+def test_trace_to_program_rejects_double_master():
+    prog = make_traffic("neighbor", 2, 2, 2)
+    from repro.mesh import Request
+    trace = [(0, 0, 5, Request(dst_x=1, dst_y=0, addr=0))]
+    with pytest.raises(ValueError, match="one master"):
+        trace_to_program(trace, 2, 2, base=prog)
+
+
+# ----------------------------------------------------------------------
+# fuzzed endpoint corpus: telemetry parity numpy (native) vs jax (bridge)
+# ----------------------------------------------------------------------
+FUZZ_MESHES = ((3, 2), (4, 3))
+FUZZ_MAX_CYCLES = 3000      # one value -> one XLA compile per mesh shape
+
+
+def _random_endpoint_scenario(backend, seed):
+    rng = np.random.default_rng(seed)
+    nx, ny = FUZZ_MESHES[int(rng.integers(0, len(FUZZ_MESHES)))]
+    mem_words = 16
+    cfg = MeshConfig(nx=nx, ny=ny, mem_words=mem_words,
+                     max_out_credits=int(rng.integers(2, 9)),
+                     router_fifo=int(rng.integers(2, 5)))
+    sim = Simulator(cfg, backend=backend, seed=0)
+    # a random (but fixed-seed) pointer soup for the chasers
+    sim.set_mem(rng.integers(0, mem_words, (ny, nx, mem_words)))
+
+    tiles = [(x, y) for y in range(ny) for x in range(nx)]
+    rng.shuffle(tiles)
+    n_dma = int(rng.integers(1, 3))
+    n_mc = int(rng.integers(1, 3))
+    for _ in range(n_dma):
+        x, y = tiles.pop()
+        dx, dy = tiles[int(rng.integers(0, len(tiles)))]
+        sim.attach(DmaEndpoint(dst_x=dx, dst_y=dy,
+                               data=rng.integers(0, 1000,
+                                                 int(rng.integers(1, 12))),
+                               max_inflight=int(rng.integers(1, 5))),
+                   at=(x, y))
+    for _ in range(n_mc):
+        x, y = tiles.pop()
+        dx, dy = tiles[int(rng.integers(0, len(tiles)))]
+        sim.attach(MemoryControllerEndpoint(
+            dst_x=dx, dst_y=dy, start_addr=int(rng.integers(0, mem_words)),
+            n_requests=int(rng.integers(1, 8)), mem_words=mem_words),
+            at=(x, y))
+    return sim
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_endpoint_telemetry_parity_fuzz(seed):
+    """Reactive scenarios — DMA engines + pointer-chasing controllers at
+    random tiles — drain on both backends at the same cycle with a
+    bit-identical Telemetry record (the trace-to-program bridge
+    contract), and the endpoints observe the same replies."""
+    case_seed = int(np.random.default_rng(4000 + seed).integers(0, 2**31))
+    a = _random_endpoint_scenario("numpy", case_seed)
+    b = _random_endpoint_scenario("jax", case_seed)
+    ca = a.run_until_drained(FUZZ_MAX_CYCLES)
+    cb = b.run_until_drained(FUZZ_MAX_CYCLES)
+    assert ca == cb, "drain cycle diverged between backends"
+    a.telemetry().assert_bit_identical(b.telemetry())
+    np.testing.assert_array_equal(np.asarray(a.mem), np.asarray(b.mem))
+    for at, (ea, eb) in {k: (a.endpoints[k], b.endpoints[k])
+                         for k in a.endpoints}.items():
+        if isinstance(ea, MemoryControllerEndpoint):
+            assert ea.visited == eb.visited, f"chase diverged at {at}"
+            assert ea.latencies == eb.latencies
+
+
+def test_jax_backend_rejects_endpoint_attach_after_run():
+    """The trace bridge replays from cycle 0, so attaching an endpoint to
+    a jax Simulator that already ran would silently drop history — it
+    must raise instead.  The numpy backend supports it natively."""
+    cfg = MeshConfig(nx=3, ny=3)
+    prog = make_traffic("neighbor", 3, 3, 2)
+    for k in prog:
+        prog[k][0, 0] = -1 if k == "op" else 0
+    jax_sim = Simulator(cfg, backend="jax")
+    jax_sim.attach({k: v.copy() for k, v in prog.items()})
+    jax_sim.run(10)
+    with pytest.raises(ValueError, match="already run"):
+        jax_sim.attach(DmaEndpoint(dst_x=2, dst_y=2, data=[1]), at=(0, 0))
+    # mid-run attach on the oracle backend stays legal (native execution)
+    np_sim = Simulator(cfg, backend="numpy")
+    np_sim.attach({k: v.copy() for k, v in prog.items()})
+    np_sim.run(10)
+    np_sim.attach(DmaEndpoint(dst_x=2, dst_y=2, data=[1]), at=(0, 0))
+    np_sim.run_until_drained()
+
+
+def test_facade_step_services_endpoints():
+    """Manual cycle-by-cycle stepping through the facade must deliver
+    responses to endpoints (same path as run()), and the jit backend
+    refuses per-cycle driving outright."""
+    cfg = MeshConfig(nx=4, ny=1, mem_words=8)
+    sim = Simulator(cfg, backend="numpy")
+    mc = MemoryControllerEndpoint(dst_x=3, dst_y=0, start_addr=0,
+                                  n_requests=3, mem_words=8)
+    sim.attach(mc, at=(0, 0))
+    for _ in range(200):
+        sim.step()
+    assert len(mc.latencies) == 3, "manual stepping starved deliver()"
+    with pytest.raises(NotImplementedError, match="numpy-backend feature"):
+        Simulator(cfg, backend="jax").step()
+
+
+def test_mixed_program_and_endpoint_parity():
+    """A base injection program on most tiles plus a reactive endpoint on
+    one: both backends agree (the bridge merges the trace with the base
+    program)."""
+    nx, ny = 3, 3
+    cfg = MeshConfig(nx=nx, ny=ny, mem_words=16)
+    entries = make_traffic("uniform", nx, ny, 4, rate=0.5, seed=2)
+    for k in entries:               # silence tile (0, 0): the endpoint's
+        entries[k][0, 0] = -1 if k == "op" else 0
+
+    def build(backend):
+        sim = Simulator(cfg, backend=backend, seed=0)
+        sim.attach({k: v.copy() for k, v in entries.items()})
+        sim.attach(DmaEndpoint(dst_x=2, dst_y=2, data=range(6),
+                               max_inflight=2), at=(0, 0))
+        return sim
+
+    a, b = build("numpy"), build("jax")
+    assert a.run_until_drained(FUZZ_MAX_CYCLES) == \
+        b.run_until_drained(FUZZ_MAX_CYCLES)
+    a.telemetry().assert_bit_identical(b.telemetry())
+
+
+# ----------------------------------------------------------------------
+# benchmarks/run.py: a crashed suite must fail the process
+# ----------------------------------------------------------------------
+def test_bench_run_exits_nonzero_on_suite_crash(tmp_path, monkeypatch):
+    run = pytest.importorskip(
+        "benchmarks.run",
+        reason="benchmarks namespace needs the repo root on sys.path")
+
+    def boom(name):
+        if name == "netsim":
+            raise RuntimeError("suite exploded")
+        return [{"name": f"{name}_fake", "ok": True}]
+
+    monkeypatch.setattr(run, "run_suite", boom)
+    rc = run.main(["--suite", "netsim", "--out", str(tmp_path)])
+    assert rc == 1
+    # artifacts are still written, with the failure recorded
+    results = json.loads((tmp_path / "bench_results.json").read_text())
+    assert results["netsim"][0]["ok"] is False
+    assert "suite exploded" in results["netsim"][0]["error"]
+
+    # and a clean suite run exits zero through the same path
+    monkeypatch.setattr(run, "run_suite",
+                        lambda name: [{"name": "fake", "ok": True}])
+    assert run.main(["--suite", "netsim", "--out", str(tmp_path)]) == 0
+
+
+def test_bench_run_exits_nonzero_on_failed_benchmark(tmp_path, monkeypatch):
+    run = pytest.importorskip("benchmarks.run")
+    monkeypatch.setattr(run, "run_suite",
+                        lambda name: [{"name": "bad", "ok": False}])
+    assert run.main(["--suite", "netsim", "--out", str(tmp_path)]) == 1

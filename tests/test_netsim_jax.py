@@ -1,42 +1,45 @@
 """Differential validation of the JAX mesh simulator against the numpy
-oracle, plus traffic-library properties.
+oracle, plus traffic-library properties — driven through the
+backend-agnostic :class:`repro.mesh.Simulator` facade.
 
 The contract is *cycle-exact* equivalence: same delivered memory, same
 completion counts, same per-cycle completion trace, same credit state,
-same drain cycle — for every traffic pattern and several mesh shapes.
+same drain cycle, and a bit-identical :class:`repro.mesh.Telemetry`
+record — for every traffic pattern and several mesh shapes.
 """
 import numpy as np
 import pytest
 
-from repro.core.netsim import (MeshSim, NetConfig, OP_LOAD, OP_STORE,
-                               unloaded_rtt)
-from repro.netsim_jax import (JaxMeshSim, PATTERNS, make_traffic)
-from repro.netsim_jax.sim import SimConfig
+from repro.core.netsim import MeshSim, NetConfig, OP_LOAD, unloaded_rtt
+from repro.mesh import MeshConfig, PATTERNS, Simulator, make_traffic
 from repro.netsim_jax.testing import assert_state_equal as _assert_state_equal
 
 MESHES = [(2, 2), (4, 4), (3, 5)]          # (nx, ny); incl. non-square
 
 
-def _pair(cfg: NetConfig, entries):
-    a = MeshSim(cfg)
-    a.load_program({k: v.copy() for k, v in entries.items()})
-    b = JaxMeshSim(cfg)
-    b.load_program(entries)
+def _pair(cfg: MeshConfig, entries):
+    a = Simulator(cfg, backend="numpy")
+    a.attach({k: v.copy() for k, v in entries.items()})
+    b = Simulator(cfg, backend="jax")
+    b.attach(entries)
     return a, b
 
 
 @pytest.mark.parametrize("pattern", sorted(PATTERNS))
 @pytest.mark.parametrize("nx,ny", MESHES)
 def test_parity_fixed_horizon(pattern, nx, ny):
-    """Cycle-for-cycle equality over a fixed horizon, all six patterns."""
+    """Cycle-for-cycle equality over a fixed horizon, all six patterns —
+    including the unified Telemetry record, field for field."""
     if pattern == "transpose" and nx != ny:
         pytest.skip("transpose is undefined on non-square meshes")
-    cfg = NetConfig(nx=nx, ny=ny, max_out_credits=6)
+    cfg = MeshConfig(nx=nx, ny=ny, max_out_credits=6)
     entries = make_traffic(pattern, nx, ny, 8, rate=0.7, seed=11)
     a, b = _pair(cfg, entries)
     a.run(120)
     b.run(120)
     _assert_state_equal(a, b)
+    a.telemetry().assert_bit_identical(b.telemetry())
+    assert a.telemetry() == b.telemetry()
 
 
 @pytest.mark.parametrize("pattern", ["uniform", "transpose", "hotspot"])
@@ -45,7 +48,7 @@ def test_parity_drain_cycle(pattern, nx, ny):
     """The global fence closes on exactly the same cycle."""
     if pattern == "transpose" and nx != ny:
         pytest.skip("transpose is undefined on non-square meshes")
-    cfg = NetConfig(nx=nx, ny=ny, max_out_credits=4)
+    cfg = MeshConfig(nx=nx, ny=ny, max_out_credits=4)
     entries = make_traffic(pattern, nx, ny, 6, seed=3)
     a, b = _pair(cfg, entries)
     ca = a.run_until_drained()
@@ -58,7 +61,7 @@ def test_parity_drain_cycle(pattern, nx, ny):
 def test_parity_loads_and_cas():
     """Loads and CAS (not just the stores the patterns default to)."""
     nx = ny = 4
-    cfg = NetConfig(nx=nx, ny=ny, record_log=False)
+    cfg = MeshConfig(nx=nx, ny=ny)
     entries = make_traffic("uniform", nx, ny, 6, op=OP_LOAD, seed=7)
     # sprinkle CAS on the first entry of every tile
     from repro.core.netsim import OP_CAS
@@ -72,7 +75,7 @@ def test_parity_loads_and_cas():
 
 def test_parity_under_backpressure():
     """Tiny FIFOs + few credits: heavy contention, stalls, HoL blocking."""
-    cfg = NetConfig(nx=4, ny=4, router_fifo=2, ep_fifo=2, max_out_credits=2)
+    cfg = MeshConfig(nx=4, ny=4, router_fifo=2, ep_fifo=2, max_out_credits=2)
     entries = make_traffic("hotspot", 4, 4, 10, fraction=0.9, seed=1)
     a, b = _pair(cfg, entries)
     a.run(300)
@@ -81,7 +84,7 @@ def test_parity_under_backpressure():
 
 
 def test_parity_resp_latency_2():
-    cfg = NetConfig(nx=3, ny=3, resp_latency=2)
+    cfg = MeshConfig(nx=3, ny=3, resp_latency=2)
     entries = make_traffic("tornado", 3, 3, 5, seed=2)
     a, b = _pair(cfg, entries)
     a.run(100)
@@ -93,13 +96,13 @@ def test_parity_resp_latency_2():
 def test_jax_unloaded_rtt_formula(hops):
     """Analytic check on the JAX path alone: RTT = 2*hops + 5."""
     nx = max(hops + 1, 2)
-    sim = JaxMeshSim(NetConfig(nx=nx, ny=2))
+    sim = Simulator(MeshConfig(nx=nx, ny=2), backend="jax")
     prog = make_traffic("neighbor", nx, 2, 1, op=OP_LOAD)
     prog["op"][:] = -1
     prog["op"][0, 0, 0] = OP_LOAD
     prog["dst_x"][0, 0, 0] = hops
     prog["dst_y"][0, 0, 0] = 0
-    sim.load_program(prog)
+    sim.attach(prog)
     sim.run(unloaded_rtt(hops) + 5)
     assert int(sim.completed[0, 0]) == 1
     assert int(sim.lat_sum[0, 0]) == unloaded_rtt(hops)
@@ -107,12 +110,13 @@ def test_jax_unloaded_rtt_formula(hops):
 
 def test_vmap_credit_sweep_matches_sequential():
     """A vmapped credit sweep equals per-value sequential runs (and the
-    oracle), demonstrating the no-recompile sweep path."""
+    oracle), demonstrating the no-recompile sweep path under the facade's
+    functional layer."""
     import jax
     import jax.numpy as jnp
     from repro.netsim_jax import init_state, load_program, simulate
 
-    scfg = SimConfig(nx=5, ny=1, max_out_credits=16)
+    scfg = MeshConfig(nx=5, ny=1, max_out_credits=16).to_sim()
     entries = make_traffic("neighbor", 5, 1, 30)
     prog = load_program(entries)
     credits = jnp.array([1, 2, 4, 8])
@@ -125,6 +129,20 @@ def test_vmap_credit_sweep_matches_sequential():
         np.testing.assert_array_equal(m.completed,
                                       np.asarray(finals.completed[i]))
         assert m.completed_per_cycle == np.asarray(per[i]).tolist()
+
+
+def test_facade_effective_overrides_match_folded_config():
+    """Simulator(fifo_depth=, max_credits=) means the same thing on both
+    backends: JAX keeps them as vmappable state, numpy folds them into
+    the config — dynamics identical."""
+    cfg = MeshConfig(nx=3, ny=3, router_fifo=4, max_out_credits=8)
+    entries = make_traffic("uniform", 3, 3, 6, seed=5)
+    a = Simulator(cfg, backend="numpy", fifo_depth=2, max_credits=3)
+    a.attach({k: v.copy() for k, v in entries.items()})
+    b = Simulator(cfg, backend="jax", fifo_depth=2, max_credits=3)
+    b.attach(entries)
+    assert a.run_until_drained() == b.run_until_drained()
+    _assert_state_equal(a, b)
 
 
 # ----------------------------------------------------------------------
@@ -183,3 +201,24 @@ def test_traffic_transpose_non_square_raises():
     ys, xs = np.mgrid[0:4, 0:4]
     assert (prog["dst_x"] == ys[..., None]).all()
     assert (prog["dst_y"] == xs[..., None]).all()
+
+
+@pytest.mark.parametrize("fraction", [0.0, -0.1, 1.5])
+def test_traffic_hotspot_invalid_fraction_raises(fraction):
+    with pytest.raises(ValueError, match="fraction must be in"):
+        make_traffic("hotspot", 4, 4, 4, fraction=fraction)
+
+
+@pytest.mark.parametrize("spot", [(-1, 0), (4, 0), (0, 4), (7, 7)])
+def test_traffic_hotspot_spot_outside_mesh_raises(spot):
+    with pytest.raises(ValueError, match="inside the"):
+        make_traffic("hotspot", 4, 4, 4, spot=spot)
+
+
+def test_traffic_hotspot_valid_params():
+    prog = make_traffic("hotspot", 4, 4, 32, spot=(3, 1), fraction=1.0,
+                        seed=2)
+    assert (prog["dst_x"] == 3).all() and (prog["dst_y"] == 1).all()
+    # boundary spot coordinates are accepted
+    make_traffic("hotspot", 4, 4, 2, spot=(0, 0))
+    make_traffic("hotspot", 4, 4, 2, spot=(3, 3))

@@ -29,7 +29,7 @@ import pytest
 
 from repro.core.netsim import (MeshSim, NetConfig, OP_CAS, OP_LOAD,
                                OP_STORE, unloaded_rtt)
-from repro.netsim_jax import JaxMeshSim
+from repro.mesh import MeshConfig, Simulator
 from repro.netsim_jax.testing import assert_state_equal
 
 try:
@@ -90,18 +90,18 @@ def _differential_case(seed, mesh_idx, fifo, credits, resp_latency,
     rate = rate_pct / 100.0
     prog["not_before"][:] = np.floor(np.arange(FUZZ_L) / rate).astype(np.int64)
 
-    cfg = NetConfig(nx=nx, ny=ny, router_fifo=fifo, ep_fifo=4,
-                    max_out_credits=credits, mem_words=16,
-                    resp_latency=resp_latency)
-    a = MeshSim(cfg)
-    a.load_program({k: v.copy() for k, v in prog.items()})
-    # identical dynamics, but drive the JAX sim through its *capacity*
-    # config with the effective depth/credits as (vmap-able) state
-    jcfg = NetConfig(nx=nx, ny=ny, router_fifo=4, ep_fifo=4,
-                     max_out_credits=8, mem_words=16,
+    cfg = MeshConfig(nx=nx, ny=ny, router_fifo=fifo, ep_fifo=4,
+                     max_out_credits=credits, mem_words=16,
                      resp_latency=resp_latency)
-    b = JaxMeshSim(jcfg, fifo_depth=fifo, max_credits=credits)
-    b.load_program(prog)
+    a = Simulator(cfg, backend="numpy")
+    a.attach({k: v.copy() for k, v in prog.items()})
+    # identical dynamics, but drive the JAX backend through its *capacity*
+    # config with the effective depth/credits as (vmap-able) state
+    jcfg = MeshConfig(nx=nx, ny=ny, router_fifo=4, ep_fifo=4,
+                      max_out_credits=8, mem_words=16,
+                      resp_latency=resp_latency)
+    b = Simulator(jcfg, backend="jax", fifo_depth=fifo, max_credits=credits)
+    b.attach(prog)
 
     ca = a.run_until_drained(max_cycles=4000)
     cb = b.run_until_drained(max_cycles=4000)
