@@ -2,47 +2,99 @@
 
 These runs are exactly the regime the numpy oracle cannot reach in
 reasonable wall time: the 512-core (16x32) array of the paper's bisection
-argument, full traffic-pattern sweeps, and a vmapped credit sweep that
-amortizes one compilation across every config.
+argument, full traffic-pattern sweeps, a vmapped credit sweep that
+amortizes one compilation across every config, and the fused-step
+throughput microbenchmark.
 
-Scenario driving goes through the backend-agnostic
-:class:`repro.mesh.Simulator` facade; the vmapped sweep drops to the
-functional ``repro.netsim_jax`` layer, which is what the facade compiles
-to anyway.
+Every suite reports **compile time and run time separately**: the jitted
+program is AOT-compiled via ``jitted.lower(...).compile()`` (timed), and
+the workloads then execute through the compiled artifact (timed).  The
+aggregate ``benchmarks/run.py`` folds these into the
+``experiments/BENCH_netsim.json`` trajectory so speedups are tracked
+PR-over-PR; ``experiments/bench_baseline.json`` is the frozen
+pre-packed-header baseline the speedup fields compare against.
 """
 from __future__ import annotations
 
+import json
 import time
-from typing import Dict, List
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.netsim import unloaded_rtt
-from repro.mesh import MeshConfig, PATTERNS, Simulator, make_traffic
-from repro.netsim_jax import (DEFAULT_SWEEP_RATES, curve_record,
-                              init_state, load_latency_sweep, load_program,
-                              simulate, sweep_config)
+from repro.core.netsim import MeshSim, unloaded_rtt
+from repro.mesh import MeshConfig, PATTERNS, make_traffic
+from repro.netsim_jax import (DEFAULT_SWEEP_RATES, compile_sweep,
+                              curve_record, init_state, load_latency_sweep,
+                              load_program, simulate, stack_rate_programs,
+                              sweep_config)
 
 __all__ = ["bench_pattern_sweep", "bench_bisection_16x32",
-           "bench_credit_sweep_vmap", "bench_load_latency_8x8", "run"]
+           "bench_credit_sweep_vmap", "bench_load_latency_8x8",
+           "bench_step_throughput", "load_baseline", "run"]
+
+BASELINE_PATH = Path(__file__).resolve().parents[1] / "experiments" / \
+    "bench_baseline.json"
+
+
+def load_baseline() -> Dict[str, Dict]:
+    """The frozen pre-refactor benchmark record (one dict per benchmark
+    name), for PR-over-PR speedup fields; empty when the snapshot is
+    missing."""
+    try:
+        raw = json.loads(BASELINE_PATH.read_text())
+    except (OSError, json.JSONDecodeError):
+        return {}
+    return {r["name"]: r for rs in raw.values() for r in rs
+            if isinstance(r, dict) and "name" in r}
+
+
+def _aot(jitted, *args) -> Tuple[object, float]:
+    """AOT-compile ``jitted`` for ``args`` via ``lower(...).compile()``;
+    returns (compiled_executable, compile_seconds).  The executable takes
+    only the non-static arguments."""
+    t0 = time.perf_counter()
+    compiled = jitted.lower(*args).compile()
+    return compiled, time.perf_counter() - t0
+
+
+def _speedup(baseline_wall: Optional[float], wall: float) -> Optional[float]:
+    if baseline_wall is None or wall <= 0:
+        return None
+    return round(float(baseline_wall) / wall, 2)
 
 
 def bench_pattern_sweep(nx: int = 16, ny: int = 16,
                         cycles: int = 1500) -> Dict:
     """Saturation throughput (ops/cycle) of every traffic pattern on a
-    16x16 array — the standard NoC evaluation battery."""
-    cfg = MeshConfig(nx=nx, ny=ny, max_out_credits=32)
-    thr = {}
+    16x16 array — the standard NoC evaluation battery.  One compile
+    serves all six patterns (same shapes)."""
+    cfg = MeshConfig(nx=nx, ny=ny, max_out_credits=32).to_sim()
     warmup = cycles // 3
-    for name in sorted(PATTERNS):
-        sim = Simulator(cfg, backend="jax")
-        sim.attach(make_traffic(name, nx, ny, cycles, seed=0))
-        sim.run(cycles)
-        thr[name] = round(sim.telemetry().throughput(warmup=warmup), 2)
+    progs = {name: load_program(make_traffic(name, nx, ny, cycles, seed=0))
+             for name in sorted(PATTERNS)}
+    first = next(iter(progs.values()))
+    compiled, compile_s = _aot(simulate, cfg, first, init_state(cfg), cycles)
+    thr: Dict[str, float] = {}
+    run_s = 0.0
+    for name, prog in progs.items():
+        t0 = time.perf_counter()
+        _, per = compiled(prog, init_state(cfg))
+        per.block_until_ready()
+        run_s += time.perf_counter() - t0
+        thr[name] = round(float(np.asarray(per)[warmup:].mean()), 2)
     # adversarial patterns must not exceed the friendly ones
     ok = thr["neighbor"] >= thr["bit_complement"] and min(thr.values()) > 0
+    wall = compile_s + run_s
+    base = load_baseline().get("traffic_pattern_sweep", {})
     return {"name": "traffic_pattern_sweep", "mesh": f"{nx}x{ny}",
-            "ops_per_cycle": thr, "ok": ok}
+            "ops_per_cycle": thr, "compile_s": round(compile_s, 2),
+            "run_s": round(run_s, 2),
+            "wall_s_incl_compile": round(wall, 2),
+            "baseline_wall_s": base.get("wall_s"),
+            "speedup_vs_baseline": _speedup(base.get("wall_s"), wall),
+            "ok": ok}
 
 
 def bench_bisection_16x32(cycles: int = 1200) -> Dict:
@@ -54,25 +106,33 @@ def bench_bisection_16x32(cycles: int = 1200) -> Dict:
     permutation like bit-complement head-of-line blocks well below the
     bound)."""
     nx, ny = 16, 32
-    cfg = MeshConfig(nx=nx, ny=ny, max_out_credits=64, router_fifo=4)
+    cfg = MeshConfig(nx=nx, ny=ny, max_out_credits=64, router_fifo=4).to_sim()
     entries = make_traffic("uniform", nx, ny, cycles, seed=0)
     # fold every destination into the source's opposite half of the array
     half = np.where(np.arange(ny)[:, None, None] < ny // 2, ny // 2, 0)
     entries["dst_y"] = entries["dst_y"] % (ny // 2) + half
-    sim = Simulator(cfg, backend="jax").attach(entries)
+    prog = load_program(entries)
+    compiled, compile_s = _aot(simulate, cfg, prog, init_state(cfg), cycles)
     t0 = time.perf_counter()
-    sim.run(cycles)
-    per = np.asarray(sim.telemetry().completed_per_cycle)
-    wall = time.perf_counter() - t0
+    _, per = compiled(prog, init_state(cfg))
+    per.block_until_ready()
+    run_s = time.perf_counter() - t0
+    per = np.asarray(per)
     thr = float(per[cycles // 3:].mean())
     bound = 2.0 * nx          # fwd + rev each cross the ny-median once
     per_core_cycles = (nx * ny) / max(thr, 1e-9)
+    wall = compile_s + run_s
+    base = load_baseline().get("bisection_bound_512core_jax", {})
     return {"name": "bisection_bound_512core_jax", "mesh": f"{nx}x{ny}",
             "paper_bound_ops_per_cycle": bound,
             "measured_ops_per_cycle": round(thr, 2),
             "paper_cycles_per_core_op": 16,
             "measured_cycles_per_core_op": round(per_core_cycles, 1),
+            "compile_s": round(compile_s, 2), "run_s": round(run_s, 2),
             "wall_s_incl_compile": round(wall, 2),
+            "baseline_wall_s": base.get("wall_s_incl_compile"),
+            "speedup_vs_baseline": _speedup(base.get("wall_s_incl_compile"),
+                                            wall),
             "ok": 0.35 * bound < thr <= bound + 1e-6}
 
 
@@ -96,24 +156,42 @@ def bench_credit_sweep_vmap(hops: int = 14) -> Dict:
     entries["not_before"][:] = 0
     prog = load_program(entries)
     sweep = jnp.asarray([1, 2, 4, rtt // 2, rtt, rtt + 8, 2 * rtt])
-    t0 = time.perf_counter()
     states = jax.vmap(lambda c: init_state(cfg, max_credits=c))(sweep)
-    _, per = jax.vmap(lambda s: simulate(cfg, prog, s, cycles))(states)
+    sweep_fn = jax.jit(lambda p, s: jax.vmap(
+        lambda st: simulate(cfg, p, st, cycles))(s))
+    compiled, compile_s = _aot(sweep_fn, prog, states)
+    t0 = time.perf_counter()
+    _, per = compiled(prog, states)
+    per.block_until_ready()
+    run_s = time.perf_counter() - t0
     per = np.asarray(per)
-    wall = time.perf_counter() - t0
     curve = {int(c): round(float(per[i, warmup:].mean()), 3)
              for i, c in enumerate(np.asarray(sweep))}
     ok = curve[rtt] > 0.9 and abs(curve[rtt // 2] - 0.5) < 0.1
+    wall = compile_s + run_s
+    base = load_baseline().get("credit_bdp_knee_vmap", {})
     return {"name": "credit_bdp_knee_vmap", "rtt_cycles": rtt,
             "throughput_vs_credits": curve,
             "configs_in_one_compile": len(curve),
-            "wall_s_incl_compile": round(wall, 2), "ok": ok}
+            "compile_s": round(compile_s, 2), "run_s": round(run_s, 2),
+            "wall_s_incl_compile": round(wall, 2),
+            "baseline_wall_s": base.get("wall_s_incl_compile"),
+            # the frozen baseline has no compile/run split, so this is the
+            # baseline's TOTAL wall over the new compile time — an upper
+            # bound on the true compile speedup, named to match
+            "baseline_wall_over_new_compile": None if not base.get(
+                "wall_s_incl_compile") else round(
+                float(base["wall_s_incl_compile"]) / max(compile_s, 1e-9), 2),
+            "speedup_vs_baseline": _speedup(base.get("wall_s_incl_compile"),
+                                            wall),
+            "ok": ok}
 
 
 def bench_load_latency_8x8(nx: int = 8, ny: int = 8) -> Dict:
     """Full load–latency saturation curves (phased warmup/measure/drain
     methodology, per-packet latency histograms) for every traffic pattern
-    on an 8x8 array, each a single vmapped XLA program over offered loads.
+    on an 8x8 array — ONE AOT-compiled vmapped XLA program over offered
+    loads, shared by all six patterns.
 
     Checks: every curve is monotone nondecreasing up to its saturation
     knee (and stays saturated past it), and the uniform-random saturation
@@ -127,31 +205,114 @@ def bench_load_latency_8x8(nx: int = 8, ny: int = 8) -> Dict:
             f"got {nx}x{ny}")
     rates = DEFAULT_SWEEP_RATES
     cfg = sweep_config(nx, ny)
+    warmup, measure, drain = 300, 500, 500
     bisection_rate = 4.0 / nx
+    progs = stack_rate_programs("uniform", nx, ny, sorted(rates),
+                                warmup + measure + drain, seed=0)
+    compiled, compile_s = compile_sweep(cfg, progs, warmup=warmup,
+                                        measure=measure, drain=drain)
     curves, ok = {}, True
     t0 = time.perf_counter()
     for name in sorted(PATTERNS):
-        out = load_latency_sweep(name, nx, ny, rates, warmup=300,
-                                 measure=500, drain=500, cfg=cfg, seed=0)
+        out = load_latency_sweep(name, nx, ny, rates, warmup=warmup,
+                                 measure=measure, drain=drain, cfg=cfg,
+                                 compiled=compiled, seed=0)
         curves[name] = curve_record(out)
         ok &= bool(out["monotone"])
-    wall = time.perf_counter() - t0
+    run_s = time.perf_counter() - t0
     sat_u = curves["uniform"]["saturation_rate"]
     sat_ok = sat_u is not None and \
         abs(sat_u - bisection_rate) <= 0.10 * bisection_rate
     ok &= sat_ok
+    wall = compile_s + run_s
+    base = load_baseline().get("load_latency_curves_8x8", {})
     return {"name": "load_latency_curves_8x8", "mesh": f"{nx}x{ny}",
             "bisection_saturation_rate": bisection_rate,
             "uniform_saturation_rate": sat_u,
             "uniform_within_10pct_of_bisection": sat_ok,
-            "curves": curves, "wall_s_incl_compile": round(wall, 2),
+            "curves": curves, "compile_s": round(compile_s, 2),
+            "run_s": round(run_s, 2),
+            "wall_s_incl_compile": round(wall, 2),
+            "baseline_wall_s": base.get("wall_s_incl_compile"),
+            "speedup_vs_baseline": _speedup(base.get("wall_s_incl_compile"),
+                                            wall),
+            "ok": bool(ok)}
+
+
+# ----------------------------------------------------------------------
+# fused-step throughput microbenchmark
+# ----------------------------------------------------------------------
+def _baseline_cycles_per_s(mesh: str) -> Optional[float]:
+    """Effective simulated cycles/second of the pre-refactor baseline on
+    ``mesh``, derived from the frozen suite records (which include their
+    one-off compile, so compare against ``incl_compile`` numbers)."""
+    base = load_baseline()
+    if mesh == "16x16" and "traffic_pattern_sweep" in base:
+        rec = base["traffic_pattern_sweep"]           # 6 patterns x 1500 cyc
+        return round(6 * 1500 / float(rec["wall_s"]), 1)
+    if mesh == "16x32" and "bisection_bound_512core_jax" in base:
+        rec = base["bisection_bound_512core_jax"]     # 1200 cycles
+        return round(1200 / float(rec["wall_s_incl_compile"]), 1)
+    return None
+
+
+def bench_step_throughput(shapes: Tuple[Tuple[int, int], ...] =
+                          ((8, 8), (16, 16), (16, 32)),
+                          cycles: int = 1500,
+                          oracle_cycles: int = 120) -> Dict:
+    """Cycles/second of the fused dual-network step on uniform-random
+    traffic, per mesh shape: AOT compile time, post-compile steady-state
+    rate (median of 3), speedup vs the numpy oracle, and — where the
+    frozen baseline has a comparable record — speedup vs the
+    pre-packed-header datapath."""
+    meshes: Dict[str, Dict] = {}
+    ok = True
+    for nx, ny in shapes:
+        cfg = MeshConfig(nx=nx, ny=ny, max_out_credits=32)
+        entries = make_traffic("uniform", nx, ny, cycles, seed=0)
+        prog = load_program(entries)
+        scfg = cfg.to_sim()
+        compiled, compile_s = _aot(simulate, scfg, prog, init_state(scfg),
+                                   cycles)
+        times = []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            _, per = compiled(prog, init_state(scfg))
+            per.block_until_ready()
+            times.append(time.perf_counter() - t0)
+        run_s = float(np.median(times))
+        jax_cps = cycles / run_s
+        oracle = MeshSim(cfg.to_net())
+        oracle.load_program({k: v.copy() for k, v in entries.items()})
+        t0 = time.perf_counter()
+        oracle.run(oracle_cycles)
+        oracle_cps = oracle_cycles / (time.perf_counter() - t0)
+        base_cps = _baseline_cycles_per_s(f"{nx}x{ny}")
+        incl_cps = cycles / (compile_s + run_s)
+        rec = {"jax_cycles_per_s": round(jax_cps, 1),
+               "jax_cycles_per_s_incl_compile": round(incl_cps, 1),
+               "compile_s": round(compile_s, 2),
+               "run_s": round(run_s, 3),
+               "oracle_cycles_per_s": round(oracle_cps, 1),
+               "speedup_vs_oracle": round(jax_cps / oracle_cps, 1),
+               "baseline_cycles_per_s_incl_compile": base_cps,
+               "speedup_vs_baseline_incl_compile": None if base_cps is None
+               else round(incl_cps / base_cps, 2)}
+        ok &= rec["speedup_vs_oracle"] >= 5.0
+        meshes[f"{nx}x{ny}"] = rec
+    return {"name": "step_throughput_microbench", "pattern": "uniform",
+            "cycles": cycles, "meshes": meshes,
+            "compile_s": round(sum(m["compile_s"] for m in meshes.values()),
+                               2),
+            "run_s": round(sum(m["run_s"] for m in meshes.values()), 2),
             "ok": bool(ok)}
 
 
 def run() -> List[Dict]:
     out = []
     for fn in (bench_pattern_sweep, bench_bisection_16x32,
-               bench_credit_sweep_vmap, bench_load_latency_8x8):
+               bench_credit_sweep_vmap, bench_load_latency_8x8,
+               bench_step_throughput):
         t0 = time.perf_counter()
         rec = fn()
         rec["wall_s"] = round(time.perf_counter() - t0, 2)

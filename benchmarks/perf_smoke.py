@@ -1,0 +1,90 @@
+"""CI perf-smoke: fail fast on router-datapath regressions.
+
+A fraction of the full benchmark battery, sized for a CI job:
+
+* the fused-step throughput microbenchmark on a 4x4 mesh (compile +
+  steady-state rate, speedup vs the numpy oracle) — catches gross
+  compile-time or throughput regressions in minutes, not tens of them;
+* a quick 2-shape x 3-pattern differential parity grid, run to the
+  global drain fence on both backends and compared with the full
+  ``assert_state_equal`` contract (memory, stats, traces, telemetry, and
+  decoded in-flight packets field-for-field) — catches datapath
+  *correctness* regressions without waiting for the full test suite.
+
+  PYTHONPATH=src python -m benchmarks.perf_smoke
+
+Exit status: nonzero on any parity mismatch or a jax-vs-oracle speedup
+below the (deliberately loose, CI-hardware-safe) floor.
+"""
+from __future__ import annotations
+
+import sys
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.mesh import MeshConfig, Simulator, make_traffic
+from repro.netsim_jax.testing import assert_state_equal
+
+from benchmarks.bench_netsim_jax import bench_step_throughput
+
+# small but non-degenerate: one square, one non-square shape; patterns
+# that exercise random, adversarial-shift and line-rate routing
+SMOKE_SHAPES = ((4, 4), (3, 2))
+SMOKE_PATTERNS = ("uniform", "tornado", "neighbor")
+SPEEDUP_FLOOR = 2.0          # vs oracle on 4x4 — loose for slow CI boxes
+
+
+def parity_grid() -> List[Dict]:
+    out = []
+    for nx, ny in SMOKE_SHAPES:
+        cfg = MeshConfig(nx=nx, ny=ny, max_out_credits=4, router_fifo=2)
+        for pattern in SMOKE_PATTERNS:
+            entries = make_traffic(pattern, nx, ny, 6, rate=0.7, seed=11)
+            a = Simulator(cfg, backend="numpy")
+            a.attach({k: v.copy() for k, v in entries.items()})
+            b = Simulator(cfg, backend="jax")
+            b.attach(entries)
+            t0 = time.perf_counter()
+            ca = a.run_until_drained(4000)
+            cb = b.run_until_drained(4000)
+            ok = True
+            err = ""
+            try:
+                assert ca == cb, f"drain cycle diverged: {ca} != {cb}"
+                assert_state_equal(a, b)
+            except AssertionError as e:
+                # numpy assertion messages start with a newline — strip
+                # before taking the headline, or the diagnostic is empty
+                head = str(e).strip().splitlines()
+                ok, err = False, head[0] if head else "?"
+            out.append({"name": f"parity_{pattern}_{nx}x{ny}", "ok": ok,
+                        "drain_cycle": ca,
+                        "wall_s": round(time.perf_counter() - t0, 2),
+                        **({"error": err} if err else {})})
+    return out
+
+
+def main() -> int:
+    records = parity_grid()
+    micro = bench_step_throughput(shapes=((4, 4),), cycles=800,
+                                  oracle_cycles=100)
+    m = micro["meshes"]["4x4"]
+    micro["ok"] = m["speedup_vs_oracle"] >= SPEEDUP_FLOOR
+    records.append(micro)
+    failed = [r["name"] for r in records if not r.get("ok")]
+    for r in records:
+        status = "OK " if r.get("ok") else "FAIL"
+        print(f"[{status}] {r['name']:32s} "
+              f"{ {k: v for k, v in r.items() if k not in ('name', 'ok')} }",
+              flush=True)
+    print(f"\n{len(records) - len(failed)}/{len(records)} perf-smoke checks OK")
+    if failed:
+        print(f"FAILED: {', '.join(failed)}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

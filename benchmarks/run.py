@@ -7,6 +7,12 @@ Writes a JSON summary to experiments/bench_results.json; the netsim_jax
 load–latency saturation curves are additionally written to
 experiments/load_latency.json (uploaded as a CI artifact).
 
+Every run also APPENDS a trajectory entry to experiments/BENCH_netsim.json
+— per-benchmark wall seconds with compile time and run time recorded
+separately (the jax suites AOT-compile via ``jitted.lower(...).compile()``
+and time the two phases independently) — so speedups and compile-time
+regressions are tracked PR-over-PR.
+
 Exit status: nonzero if any benchmark reports ``ok: false`` OR any suite
 crashes outright — a crashed suite still gets a failure record and the
 JSON artifacts are still written, but the process must not report
@@ -21,6 +27,43 @@ from pathlib import Path
 from typing import Dict, List
 
 SUITES = ("netsim", "netsim_jax", "collectives", "kernels", "train")
+
+# trajectory entries keep only the timing/health fields, not full payloads
+_TRAJECTORY_KEYS = ("wall_s", "compile_s", "run_s", "wall_s_incl_compile",
+                    "speedup_vs_baseline", "ok")
+
+
+def trajectory_entry(results: Dict[str, List[Dict]], wall: float) -> Dict:
+    """One PR-over-PR record: per-benchmark timing split + suite walls."""
+    return {
+        "when": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "total_wall_s": round(wall, 1),
+        "suites": {
+            name: {
+                "wall_s": round(sum(float(r.get("wall_s", 0) or 0)
+                                    for r in recs), 2),
+                "compile_s": round(sum(float(r.get("compile_s", 0) or 0)
+                                       for r in recs), 2),
+                "ok": all(bool(r.get("ok")) for r in recs),
+            } for name, recs in results.items()},
+        "benchmarks": {
+            r["name"]: {k: r[k] for k in _TRAJECTORY_KEYS if k in r}
+            for recs in results.values() for r in recs if "name" in r},
+    }
+
+
+def append_trajectory(out_dir: Path, entry: Dict) -> Path:
+    path = out_dir / "BENCH_netsim.json"
+    try:
+        history = json.loads(path.read_text())
+        if not isinstance(history, list):
+            history = []
+    except (OSError, json.JSONDecodeError):
+        history = []
+    history.append(entry)
+    with open(path, "w") as f:
+        json.dump(history, f, indent=1, default=str)
+    return path
 
 
 def run_suite(name: str) -> List[Dict]:
@@ -73,6 +116,8 @@ def main(argv=None) -> int:
         with open(out / "load_latency.json", "w") as f:
             json.dump(sweeps[0], f, indent=1, default=str)
         print(f"wrote {out / 'load_latency.json'}")
+    # PR-over-PR timing trajectory (appended, never overwritten)
+    print(f"appended {append_trajectory(out, trajectory_entry(results, wall))}")
     if crashed:
         print(f"FAILED: suite(s) crashed: {', '.join(crashed)}")
         return 1

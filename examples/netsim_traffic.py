@@ -61,12 +61,15 @@ def vmapped_credit_sweep(hops: int = 8, cycles: int = 400) -> None:
     entries["dst_x"][0, 0, :] = hops
     prog = load_program(entries)
     rtt = 2 * hops + 5
-    credits = jnp.asarray([1, 2, 4, 8, 16, rtt, 32])
-    states = jax.vmap(lambda c: init_state(cfg, max_credits=c))(credits)
+    # keep a host-side copy: `simulate` donates its SimState, and the
+    # vmapped states alias the `credits` buffer they were built from
+    credits = np.asarray([1, 2, 4, 8, 16, rtt, 32])
+    states = jax.vmap(lambda c: init_state(cfg, max_credits=c))(
+        jnp.asarray(credits))
     _, per = jax.vmap(lambda s: simulate(cfg, prog, s, cycles))(states)
     print(f"== credit sweep (one compile, {len(credits)} configs; "
           f"RTT = {rtt} cycles) ==")
-    for c, row in zip(np.asarray(credits), np.asarray(per)):
+    for c, row in zip(credits, np.asarray(per)):
         print(f"  credits={int(c):3d}  throughput={row[cycles // 4:].mean():.3f} "
               f"stores/cycle")
 

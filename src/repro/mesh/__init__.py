@@ -19,7 +19,9 @@ user design plug into the mesh.  It provides
 * the traffic-pattern library (``make_traffic`` and friends) emitting
   injection programs consumable everywhere.
 """
+from . import encoding  # noqa: F401
 from .config import MeshConfig  # noqa: F401
+from .encoding import validate_program  # noqa: F401
 from .endpoint import (DmaEndpoint, Endpoint,  # noqa: F401
                        MemoryControllerEndpoint, ProgramEndpoint, Request,
                        Response, trace_to_program)
@@ -30,6 +32,7 @@ from .traffic import (PATTERNS, PROG_KEYS, bit_complement,  # noqa: F401
                       nearest_neighbor, tornado, transpose, uniform_random)
 
 __all__ = ["MeshConfig", "Simulator", "BACKENDS", "Telemetry",
+           "encoding", "validate_program",
            "TELEMETRY_ARRAY_FIELDS", "Endpoint", "Request", "Response",
            "ProgramEndpoint", "DmaEndpoint", "MemoryControllerEndpoint",
            "trace_to_program", "PATTERNS", "PROG_KEYS", "empty_program",

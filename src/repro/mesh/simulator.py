@@ -48,6 +48,7 @@ import numpy as np
 from repro.core.netsim import MeshSim, _PKT_FIELDS
 
 from .config import MeshConfig
+from .encoding import validate_program
 from .endpoint import Endpoint, Request, Response, trace_to_program
 from .telemetry import Telemetry
 
@@ -61,7 +62,8 @@ class Simulator:
 
     def __init__(self, cfg, *, backend: str = "numpy", seed: int = 0,
                  fifo_depth: Optional[int] = None,
-                 max_credits: Optional[int] = None):
+                 max_credits: Optional[int] = None,
+                 unroll: int = 1, check_every: int = 1):
         """``cfg`` may be a MeshConfig, NetConfig or SimConfig.
 
         ``fifo_depth`` / ``max_credits`` set the *effective* router-FIFO
@@ -69,15 +71,27 @@ class Simulator:
         JAX backend they stay dynamic state (so sweeps vmap without
         recompiling); the numpy oracle folds them into its config, which
         is dynamics-identical.
+
+        ``unroll`` / ``check_every`` are JAX-backend jit tuning knobs
+        (scan-unroll factor of ``run``; drain-fence check cadence of
+        ``run_until_drained`` — see :func:`repro.netsim_jax.simulate` /
+        :func:`repro.netsim_jax.run_until_drained`).  They affect speed
+        only, never results; the numpy oracle ignores them.
         """
         if backend not in BACKENDS:
             raise ValueError(
                 f"unknown backend {backend!r}; known: {BACKENDS}")
+        if unroll < 1 or check_every < 1:
+            raise ValueError(
+                f"unroll and check_every must be >= 1, got unroll={unroll}, "
+                f"check_every={check_every}")
         self.cfg = MeshConfig.coerce(cfg)
         self.backend = backend
         self._seed = seed
         self._fifo_depth = fifo_depth
         self._max_credits = max_credits
+        self._unroll = int(unroll)
+        self._check_every = int(check_every)
         self._endpoints: Dict[Tuple[int, int], Endpoint] = {}  # (y, x) -> ep
         self._trace: List[Tuple[int, int, int, Request]] = []
         self._program: Optional[Dict[str, np.ndarray]] = None
@@ -104,7 +118,9 @@ class Simulator:
             return MeshSim(self._effective_cfg().to_net(), seed=self._seed)
         from repro.netsim_jax.sim import JaxMeshSim
         return JaxMeshSim(self.cfg.to_sim(), fifo_depth=self._fifo_depth,
-                          max_credits=self._max_credits)
+                          max_credits=self._max_credits,
+                          unroll=self._unroll,
+                          check_every=self._check_every)
 
     def _bridge(self) -> "Simulator":
         """The internal oracle that natively executes reactive endpoints
@@ -173,6 +189,10 @@ class Simulator:
         return self
 
     def _attach_program(self, entries: Dict[str, np.ndarray]) -> None:
+        # one packet-domain contract for BOTH backends: coordinates and
+        # opcode must fit the packed header widths (and the mesh), payload
+        # lanes must fit int32 — the error names the offending field
+        validate_program(entries, nx=self.cfg.nx, ny=self.cfg.ny)
         op = np.asarray(entries["op"])
         for (y, x) in self._endpoints:
             if (op[y, x] >= 0).any():

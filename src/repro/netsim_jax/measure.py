@@ -41,13 +41,15 @@ import numpy as np
 
 from repro.core.netsim import LAT_BINS
 from repro.mesh.config import MeshConfig
-from .sim import Program, SimConfig, SimState, init_state, load_program, simulate
+from .sim import (FWD, Program, SimConfig, SimState, init_state,
+                  load_program, simulate)
 from .traffic import make_traffic
 
 __all__ = ["PhaseStats", "phased_stats", "measure_program",
            "stack_rate_programs", "load_latency_sweep", "saturation_point",
            "curve_is_monotone", "curve_record", "hist_quantile",
-           "SATURATION_FACTOR", "DEFAULT_SWEEP_RATES", "sweep_config"]
+           "compile_sweep", "SATURATION_FACTOR", "DEFAULT_SWEEP_RATES",
+           "sweep_config"]
 
 # mean latency >= SATURATION_FACTOR * zero-load latency <=> saturated
 SATURATION_FACTOR = 3.0
@@ -102,23 +104,28 @@ def hist_quantile(hist: jax.Array, q: float) -> jax.Array:
     return jnp.where(total > 0, jnp.minimum(idx, LAT_BINS - 1), 0).astype(F32)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 3, 4, 5))
+@functools.partial(jax.jit, static_argnums=(0, 3, 4, 5, 6))
 def phased_stats(cfg: SimConfig, prog: Program, state: SimState,
-                 warmup: int, measure: int, drain: int) -> PhaseStats:
+                 warmup: int, measure: int, drain: int,
+                 unroll: int = 1) -> PhaseStats:
     """Run warmup -> measurement window -> drain and reduce the telemetry
     into :class:`PhaseStats`.  ``state`` should be fresh (its histogram
-    empty); the measurement window is cycles [warmup, warmup + measure)."""
+    empty); the measurement window is cycles [warmup, warmup + measure).
+    ``unroll`` is the scan-unroll factor of the underlying
+    :func:`repro.netsim_jax.simulate` phases (a speed knob — it never
+    changes results).  No buffer donation here: the reduced stats are
+    tiny, so the state has no output to alias with."""
     ntiles = cfg.nx * cfg.ny
     st = state._replace(
         measure_start=state.cycle + warmup,
         measure_stop=state.cycle + warmup + measure)
-    st, _ = simulate(cfg, prog, st, warmup)
+    st, _ = simulate(cfg, prog, st, warmup, unroll)
     inj0, comp0 = st.prog_ptr.sum(), st.completed.sum()
-    util0 = st.link_util_fwd
-    st, _ = simulate(cfg, prog, st, measure)
+    util0 = st.link_util[FWD]
+    st, _ = simulate(cfg, prog, st, measure, unroll)
     inj1, comp1 = st.prog_ptr.sum(), st.completed.sum()
-    util1 = st.link_util_fwd
-    st, _ = simulate(cfg, prog, st, drain)
+    util1 = st.link_util[FWD]
+    st, _ = simulate(cfg, prog, st, drain, unroll)
 
     hist = st.lat_hist
     total = hist.sum()
@@ -142,13 +149,13 @@ def phased_stats(cfg: SimConfig, prog: Program, state: SimState,
 
 def measure_program(cfg, entries: Dict[str, np.ndarray], *,
                     warmup: int = 200, measure: int = 400,
-                    drain: int = 400) -> Dict[str, float]:
+                    drain: int = 400, unroll: int = 1) -> Dict[str, float]:
     """Convenience: phased measurement of one injection program; returns
     plain-python stats (``hist`` as a numpy array).  ``cfg`` may be a
     MeshConfig, NetConfig or SimConfig."""
     cfg = _as_simconfig(cfg)
     stats = phased_stats(cfg, load_program(entries), init_state(cfg),
-                         warmup, measure, drain)
+                         warmup, measure, drain, unroll)
     out = {k: float(v) for k, v in stats._asdict().items() if k != "hist"}
     out["hist"] = np.asarray(stats.hist)
     return out
@@ -222,23 +229,75 @@ def curve_record(out: Dict[str, object]) -> Dict[str, object]:
     }
 
 
+@functools.lru_cache(maxsize=None)
+def _sweep_jit(cfg: SimConfig, warmup: int, measure: int, drain: int,
+               unroll: int):
+    """The jitted, rate-vmapped phased-measurement program, cached per
+    (config, phase lengths, unroll) so every traffic pattern of a sweep
+    suite shares ONE compilation instead of re-tracing per call."""
+    def f(progs: Program) -> PhaseStats:
+        return jax.vmap(
+            lambda p: phased_stats(cfg, p, init_state(cfg), warmup, measure,
+                                   drain, unroll))(progs)
+    return jax.jit(f)
+
+
+class CompiledSweep(NamedTuple):
+    """An AOT-compiled sweep executable plus the phase-length key it was
+    built for (the shapes alone cannot detect a warmup/measure/drain
+    permutation with the same total horizon, so the key is checked)."""
+    executable: object
+    key: tuple        # (cfg, warmup, measure, drain, unroll)
+
+    def __call__(self, progs: Program) -> "PhaseStats":
+        return self.executable(progs)
+
+
+def compile_sweep(cfg, progs: Program, *, warmup: int = 200,
+                  measure: int = 400, drain: int = 400, unroll: int = 1):
+    """AOT-compile the vmapped sweep program for ``progs``-shaped input
+    via ``jitted.lower(...).compile()``; returns
+    ``(CompiledSweep, compile_seconds)``.  Pass the executable to
+    :func:`load_latency_sweep` (``compiled=``, same phase lengths) to
+    measure pure run time — the benchmark suite uses this to report
+    compile and run time separately."""
+    import time
+    cfg = _as_simconfig(cfg)
+    fn = _sweep_jit(cfg, warmup, measure, drain, unroll)
+    t0 = time.perf_counter()
+    compiled = fn.lower(progs).compile()
+    return CompiledSweep(compiled, (cfg, warmup, measure, drain, unroll)), \
+        time.perf_counter() - t0
+
+
 def load_latency_sweep(pattern: str, nx: int, ny: int,
                        rates: Sequence[float], *,
                        warmup: int = 200, measure: int = 400,
-                       drain: int = 400, cfg=None,
-                       **traffic_kw) -> Dict[str, object]:
+                       drain: int = 400, cfg=None, unroll: int = 1,
+                       compiled=None, **traffic_kw) -> Dict[str, object]:
     """Full load–latency saturation curve for one traffic pattern: the
     phased measurement ``vmap``-ed over offered loads in a single XLA
     program.  Returns numpy arrays keyed like :class:`PhaseStats`, plus
     the rate grid, zero-load latency, and the located saturation point.
-    ``cfg`` may be a MeshConfig, NetConfig or SimConfig."""
+    ``cfg`` may be a MeshConfig, NetConfig or SimConfig; ``compiled`` an
+    executable from :func:`compile_sweep` (same config/phases/shapes)."""
     rates = sorted(float(r) for r in rates)
     cfg = SimConfig(nx=nx, ny=ny) if cfg is None else _as_simconfig(cfg)
     horizon = warmup + measure + drain
     progs = stack_rate_programs(pattern, nx, ny, rates, horizon, **traffic_kw)
-    stats = jax.vmap(
-        lambda p: phased_stats(cfg, p, init_state(cfg), warmup, measure,
-                               drain))(progs)
+    if compiled is None:
+        run = _sweep_jit(cfg, warmup, measure, drain, unroll)
+    else:
+        key = getattr(compiled, "key", None)
+        want = (cfg, warmup, measure, drain, unroll)
+        if key is not None and key != want:
+            raise ValueError(
+                f"compiled sweep was built for (cfg, warmup, measure, "
+                f"drain, unroll) = {key}, but load_latency_sweep was "
+                f"called with {want}; matching shapes would execute "
+                "silently with the wrong measurement windows")
+        run = compiled
+    stats = run(progs)
     out: Dict[str, object] = {k: np.asarray(v)
                               for k, v in stats._asdict().items()}
     out["rates"] = np.asarray(rates)

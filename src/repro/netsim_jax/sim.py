@@ -10,17 +10,39 @@ program:
 * the per-cycle update is :func:`step` (``SimState -> SimState``), driven by
   ``lax.scan`` in :func:`simulate` / ``lax.while_loop`` in
   :func:`run_until_drained`;
-* stateful circular FIFOs become index arithmetic + masked one-hot scatter
+* packets are **header-packed**: the five routing/control fields
+  (dst/src coordinates + opcode) live in one int32 word
+  (:mod:`repro.mesh.encoding`), so a packet is 5 lanes
+  (``hdr, addr, data, cmp, tag``) instead of the oracle's 9 fields —
+  nearly halving per-cycle FIFO buffer traffic;
+* the forward and reverse networks are **fused** into one stacked
+  ``(2, ny, nx, ...)`` FIFO pytree; routing, round-robin arbitration and
+  the buffer write trace *once* per cycle over the stacked axis instead
+  of twice, halving the emitted HLO (and with it XLA compile time).  The
+  networks' only semantic difference — whether the port-P output may
+  deliver this cycle — enters arbitration as a pure AND on the P output
+  column, so it is applied *after* the fused pass (:func:`_finalize`)
+  without changing any result bit;
+* stateful circular FIFOs become index arithmetic + masked one-hot selects
   (:func:`_fifo_push` / :func:`_fifo_pop`); round-robin arbitration is a
   fixed 5-iteration priority minimisation instead of a data-dependent loop;
 * the *effective* router-FIFO depth and credit allowance live in
   ``SimState`` (as scalars) rather than in the static config, so sweeps
   over FIFO depth or ``max_out_credits`` are ``vmap``-able without
-  recompiling — as are sweeps over seeds via a stacked injection program.
+  recompiling — as are sweeps over seeds via a stacked injection program;
+* all three jitted entry points **donate** the ``SimState`` argument, so
+  XLA updates the (large) FIFO buffers in place instead of copying them;
+* :func:`simulate` takes a static ``unroll`` factor for its ``lax.scan``,
+  and :func:`run_until_drained` a ``check_every`` cadence that evaluates
+  the global drain fence every K cycles instead of every cycle (the
+  reported drain cycle stays exact; with K > 1 the *state* may run up to
+  K - 1 cycles past the fence, which only advances ``SimState.cycle`` —
+  a drained network is quiescent).
 
 The numpy :class:`~repro.core.netsim.MeshSim` remains the oracle: the JAX
 path is validated cycle-for-cycle against it in
-``tests/test_netsim_jax.py``.  Keep the sub-step ordering here in lockstep
+``tests/test_netsim_jax.py``, including decoded packet-level state in
+``tests/test_encoding.py``.  Keep the sub-step ordering here in lockstep
 with ``MeshSim.step`` — it is load-bearing for exact parity.
 """
 from __future__ import annotations
@@ -38,20 +60,30 @@ from jax import lax
 from repro.core.netsim import (LAT_BINS, NO_MEASURE, NetConfig, NUM_DIRS,
                                P, W, E, N, S)
 from repro.core.netsim import OP_CAS, OP_LOAD, OP_STORE  # noqa: F401 (re-export)
+from repro.mesh.encoding import (COORD_LIMIT, COORD_MASK, DST_Y_SHIFT,
+                                 OP_MASK, OP_SHIFT, pack_dst_op,
+                                 swap_for_response, validate_program,
+                                 with_src)
 
-__all__ = ["SimConfig", "SimState", "Fifo", "Program", "init_state",
-           "load_program", "empty_program_for", "step", "simulate",
-           "run_until_drained", "run_until_drained_traced", "drained",
-           "JaxMeshSim"]
+__all__ = ["SimConfig", "SimState", "Fifo", "Program", "FWD", "REV",
+           "init_state", "load_program", "empty_program_for", "step",
+           "simulate", "run_until_drained", "run_until_drained_traced",
+           "drained", "JaxMeshSim"]
 
-# packet field order — identical to netsim._PKT_FIELDS
-FIELDS = ("dst_x", "dst_y", "src_x", "src_y", "addr", "data", "cmp", "op",
-          "tag")
+# packet lanes: the five header fields of netsim._PKT_FIELDS are packed
+# into the single `hdr` word (see repro.mesh.encoding for the layout)
+FIELDS = ("hdr", "addr", "data", "cmp", "tag")
 F = len(FIELDS)
 _FI = {k: i for i, k in enumerate(FIELDS)}
 
-PROG_FIELDS = ("dst_x", "dst_y", "addr", "data", "cmp", "op", "not_before")
+# injection-program lanes: `hdr` holds (dst_x, dst_y, op) with the source
+# pair zero — the injecting tile ORs itself in at injection time
+PROG_FIELDS = ("hdr", "addr", "data", "cmp", "not_before")
 _PI = {k: i for i, k in enumerate(PROG_FIELDS)}
+
+# the stacked physical-network axis: index 0 = forward (requests),
+# index 1 = reverse (responses/credits)
+FWD, REV = 0, 1
 
 I32 = jnp.int32
 
@@ -71,6 +103,13 @@ class SimConfig:
     max_out_credits: int = 16
     mem_words: int = 64
     resp_latency: int = 1
+
+    def __post_init__(self):
+        if not (0 < self.nx <= COORD_LIMIT and 0 < self.ny <= COORD_LIMIT):
+            raise ValueError(
+                f"mesh dimensions must be in [1, {COORD_LIMIT}] to fit the "
+                f"packed header coordinate fields, got nx={self.nx}, "
+                f"ny={self.ny}")
 
     @classmethod
     def from_netconfig(cls, cfg: NetConfig) -> "SimConfig":
@@ -103,29 +142,33 @@ def _simconfig_from_net(cfg: NetConfig) -> "SimConfig":
 
 
 class Fifo(NamedTuple):
-    """Struct-of-arrays circular FIFOs: ``buf`` (F, ny, nx, ports, cap)."""
+    """Struct-of-arrays circular FIFOs.
+
+    The two router networks are stacked: ``buf`` is
+    ``(F, 2, ny, nx, ports, cap)`` with ``head``/``count``
+    ``(2, ny, nx, ports)``; the endpoint request FIFO keeps its unstacked
+    ``(F, ny, nx, 1, cap)`` shape."""
     buf: jax.Array
-    head: jax.Array    # (ny, nx, ports)
-    count: jax.Array   # (ny, nx, ports)
+    head: jax.Array
+    count: jax.Array
 
 
 class Program(NamedTuple):
     """Injection program, kept *outside* the scan carry (it is loop
-    invariant; carrying it would copy it every cycle)."""
+    invariant; carrying it would copy it every cycle).  ``buf`` lanes are
+    ``PROG_FIELDS`` — header-packed, 5 lanes."""
     buf: jax.Array      # (len(PROG_FIELDS), ny, nx, Lp)
     length: jax.Array   # (ny, nx) — entries with op >= 0
 
 
 class SimState(NamedTuple):
-    fwd: Fifo
-    rev: Fifo
+    net: Fifo                  # stacked fwd/rev router FIFOs (see Fifo)
     ep_in: Fifo
     resp_valid: jax.Array      # (L, ny, nx) bool
     resp_buf: jax.Array        # (F, L, ny, nx)
     mem: jax.Array             # (ny, nx, mem_words)
     credits: jax.Array         # (ny, nx)
-    rr: jax.Array              # (ny, nx, 5)
-    rr_rev: jax.Array          # (ny, nx, 5)
+    rr: jax.Array              # (2, ny, nx, 5) round-robin ptrs per network
     prog_ptr: jax.Array        # (ny, nx)
     reg_valid: jax.Array       # (ny, nx) bool
     reg_buf: jax.Array         # (F, ny, nx)
@@ -136,20 +179,12 @@ class SimState(NamedTuple):
     fifo_depth: jax.Array      # scalar — effective router FIFO depth
     max_credits: jax.Array     # scalar — effective credit allowance
     # telemetry (cycle-exact twins of the MeshSim accumulators) ---------
-    link_util_fwd: jax.Array   # (ny, nx, 5) — packets out of each port
-    link_util_rev: jax.Array   # (ny, nx, 5)
-    fifo_hwm_fwd: jax.Array    # (ny, nx, 5) — occupancy high-water marks
-    fifo_hwm_rev: jax.Array    # (ny, nx, 5)
+    link_util: jax.Array       # (2, ny, nx, 5) — packets out of each port
+    fifo_hwm: jax.Array        # (2, ny, nx, 5) — occupancy high-water marks
     ep_hwm: jax.Array          # (ny, nx)
     lat_hist: jax.Array        # (LAT_BINS,) — per-packet RTT histogram
     measure_start: jax.Array   # scalar — window gate on the packet tag
     measure_stop: jax.Array    # scalar
-
-
-def _empty_fifo(ny: int, nx: int, ports: int, cap: int) -> Fifo:
-    return Fifo(buf=jnp.zeros((F, ny, nx, ports, cap), I32),
-                head=jnp.zeros((ny, nx, ports), I32),
-                count=jnp.zeros((ny, nx, ports), I32))
 
 
 def init_state(cfg: SimConfig,
@@ -166,15 +201,17 @@ def init_state(cfg: SimConfig,
     depth = jnp.asarray(cfg.router_fifo if fifo_depth is None else fifo_depth, I32)
     mc = jnp.asarray(cfg.max_out_credits if max_credits is None else max_credits, I32)
     return SimState(
-        fwd=_empty_fifo(ny, nx, NUM_DIRS, cfg.router_fifo),
-        rev=_empty_fifo(ny, nx, NUM_DIRS, cfg.router_fifo),
-        ep_in=_empty_fifo(ny, nx, 1, cfg.ep_fifo),
+        net=Fifo(buf=jnp.zeros((F, 2, ny, nx, NUM_DIRS, cfg.router_fifo), I32),
+                 head=jnp.zeros((2, ny, nx, NUM_DIRS), I32),
+                 count=jnp.zeros((2, ny, nx, NUM_DIRS), I32)),
+        ep_in=Fifo(buf=jnp.zeros((F, ny, nx, 1, cfg.ep_fifo), I32),
+                   head=jnp.zeros((ny, nx, 1), I32),
+                   count=jnp.zeros((ny, nx, 1), I32)),
         resp_valid=jnp.zeros((L, ny, nx), bool),
         resp_buf=jnp.zeros((F, L, ny, nx), I32),
         mem=jnp.zeros((ny, nx, cfg.mem_words), I32),
         credits=jnp.broadcast_to(mc, (ny, nx)).astype(I32),
-        rr=jnp.zeros((ny, nx, NUM_DIRS), I32),
-        rr_rev=jnp.zeros((ny, nx, NUM_DIRS), I32),
+        rr=jnp.zeros((2, ny, nx, NUM_DIRS), I32),
         prog_ptr=jnp.zeros((ny, nx), I32),
         reg_valid=jnp.zeros((ny, nx), bool),
         reg_buf=jnp.zeros((F, ny, nx), I32),
@@ -184,10 +221,8 @@ def init_state(cfg: SimConfig,
         cycle=jnp.asarray(0, I32),
         fifo_depth=depth,
         max_credits=mc,
-        link_util_fwd=jnp.zeros((ny, nx, NUM_DIRS), I32),
-        link_util_rev=jnp.zeros((ny, nx, NUM_DIRS), I32),
-        fifo_hwm_fwd=jnp.zeros((ny, nx, NUM_DIRS), I32),
-        fifo_hwm_rev=jnp.zeros((ny, nx, NUM_DIRS), I32),
+        link_util=jnp.zeros((2, ny, nx, NUM_DIRS), I32),
+        fifo_hwm=jnp.zeros((2, ny, nx, NUM_DIRS), I32),
         ep_hwm=jnp.zeros((ny, nx), I32),
         lat_hist=jnp.zeros((LAT_BINS,), I32),
         measure_start=jnp.asarray(0, I32),
@@ -197,26 +232,32 @@ def init_state(cfg: SimConfig,
 
 def load_program(entries: Dict[str, np.ndarray]) -> Program:
     """Pack an injection program (same schema as ``MeshSim.load_program``:
-    fields shaped (ny, nx, L), ``op`` < 0 marks padding)."""
+    fields shaped (ny, nx, L), ``op`` < 0 marks padding) into the
+    header-packed 5-lane :class:`Program`.
+
+    Validates the packet domain first: coordinates and opcode must fit
+    the packed header field widths, payload lanes must fit int32 — see
+    :func:`repro.mesh.encoding.validate_program` for the exact limits
+    (the error names the offending field).
+    """
     op = np.asarray(entries["op"])
     ny, nx, Lp = op.shape
-    buf = np.zeros((len(PROG_FIELDS), ny, nx, Lp), np.int32)
-    i32 = np.iinfo(np.int32)
-    for k, i in _PI.items():
-        if k in entries:
-            v = np.asarray(entries[k])
-            if v.min(initial=0) < i32.min or v.max(initial=0) > i32.max:
-                raise ValueError(
-                    f"program field {k!r} exceeds the JAX simulator's int32 "
-                    "packet domain (the numpy oracle is int64); clamp values "
-                    f"to [{i32.min}, {i32.max}]")
-            buf[i] = v.astype(np.int32)
+    validate_program(entries)
+    zero = np.zeros(op.shape, np.int64)
+
+    def get(k):
+        return np.asarray(entries[k]) if k in entries else zero
+
+    buf = np.stack([
+        pack_dst_op(get("dst_x").astype(np.int64), get("dst_y"), op),
+        get("addr"), get("data"), get("cmp"), get("not_before"),
+    ]).astype(np.int32)
     return Program(buf=jnp.asarray(buf),
                    length=jnp.asarray((op >= 0).sum(-1), I32))
 
 
 def _empty_program_for(cfg: SimConfig) -> Program:
-    return Program(buf=jnp.full((len(PROG_FIELDS), cfg.ny, cfg.nx, 1), -1, I32),
+    return Program(buf=jnp.zeros((len(PROG_FIELDS), cfg.ny, cfg.nx, 1), I32),
                    length=jnp.zeros((cfg.ny, cfg.nx), I32))
 
 
@@ -234,7 +275,7 @@ def empty_program_for(cfg: SimConfig) -> Program:
 # FIFO primitives (pure)
 # ----------------------------------------------------------------------
 def _fifo_peek(f: Fifo) -> jax.Array:
-    """Head packet of every FIFO: (F, ny, nx, ports).
+    """Head packet of every FIFO: ``buf`` minus its capacity axis.
 
     A select chain over the (small, static) depth axis rather than a
     gather — XLA CPU fuses the selects into one elementwise pass, while a
@@ -253,74 +294,96 @@ def _fifo_pop(f: Fifo, mask: jax.Array, depth: jax.Array) -> Fifo:
 
 def _fifo_push(f: Fifo, mask: jax.Array, pkt: jax.Array,
                depth: jax.Array) -> Fifo:
-    """Enqueue ``pkt`` (F, ny, nx, ports) where ``mask`` (ny, nx, ports);
-    caller guarantees space.  A one-hot masked select over the (small)
-    depth axis — fuses to a single elementwise pass on CPU, where XLA
-    scatters are far slower."""
+    """Enqueue ``pkt`` (buf shape minus capacity) where ``mask``; caller
+    guarantees space.  A one-hot masked select over the (small) depth
+    axis — fuses to a single elementwise pass on CPU, where XLA scatters
+    are far slower."""
     cap = f.buf.shape[-1]
-    tail = (f.head + f.count) % depth                       # (ny, nx, ports)
+    tail = (f.head + f.count) % depth
     onehot = (jnp.arange(cap, dtype=I32) == tail[..., None]) & mask[..., None]
     buf = jnp.where(onehot[None], pkt[..., None], f.buf)
     return f._replace(buf=buf, count=f.count + mask.astype(I32))
 
 
 # ----------------------------------------------------------------------
-# router
+# router — one fused pass over the stacked (fwd, rev) network axis
 # ----------------------------------------------------------------------
-def _route(heads: jax.Array, xs: jax.Array, ys: jax.Array) -> jax.Array:
-    """XY dimension-ordered output port for each head packet
-    (heads: (F, ny, nx, ports) -> (ny, nx, ports))."""
-    dx, dy = heads[_FI["dst_x"]], heads[_FI["dst_y"]]
-    x, y = xs[..., None], ys[..., None]
-    return jnp.where(dx > x, E, jnp.where(dx < x, W,
+def _arbitrate_fused(net: Fifo, rr: jax.Array, xs: np.ndarray, ys: np.ndarray,
+                     depth: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Routing + round-robin arbitration for BOTH networks in one traced
+    pass (mirrors the first half of ``MeshSim._router_step``, stacked).
+
+    Returns ``(win, moved_pkt)`` where ``win`` (2, ny, nx, out) is the
+    winning input port per output (-1 = none) with the port-P deliver
+    gate NOT yet applied (computed as if the P output always had space),
+    and ``moved_pkt`` (F, 2, ny, nx, out) the winner's packet.  The gate
+    is a pure AND on the P output's candidate column, so
+    :func:`_finalize` can apply it per network afterwards without
+    changing any other column — this is what lets the two networks share
+    one arbitration trace even though the forward network's deliver space
+    depends on the endpoint service step that *reads* the reverse
+    network's results.
+    """
+    heads = _fifo_peek(net)                     # (F, 2, ny, nx, 5)
+    valid = net.count > 0                       # (2, ny, nx, 5)
+    # XY dimension-ordered routing straight off the packed header word
+    h = heads[_FI["hdr"]]
+    dx, dy = h & COORD_MASK, (h >> DST_Y_SHIFT) & COORD_MASK
+    x, y = xs[None, :, :, None], ys[None, :, :, None]
+    want = jnp.where(dx > x, E, jnp.where(dx < x, W,
            jnp.where(dy > y, S, jnp.where(dy < y, N, P)))).astype(I32)
 
-
-def _arbitrate(net: Fifo, rr: jax.Array, deliver_space: jax.Array,
-               xs: jax.Array, ys: jax.Array, depth: jax.Array,
-               ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
-    """Routing + round-robin arbitration for one network, one cycle
-    (mirrors the first half of ``MeshSim._router_step``).  Returns
-    (rr', pop_mask (ny,nx,in), has (ny,nx,out), moved_pkt (F,ny,nx,out))."""
-    ny, nx = deliver_space.shape
-    heads = _fifo_peek(net)                     # (F, ny, nx, 5)
-    valid = net.count > 0                       # (ny, nx, 5)
-    want = _route(heads, xs, ys)                # (ny, nx, 5)
-
     # Destination space per output port (start-of-cycle, conservative),
-    # assembled with shifts + one stack (cheaper than slice updates on CPU).
-    space = net.count < depth                   # (ny, nx, 5)
+    # assembled with shifts + one stack; the P column is provisionally
+    # True (the deliver gate is applied in _finalize).
+    space = net.count < depth                   # (2, ny, nx, 5)
     pad = functools.partial(jnp.pad, mode="constant", constant_values=False)
+    z1 = ((0, 0),)
     out_space = jnp.stack([
-        deliver_space,                                  # P
-        pad(space[:, :-1, E], ((0, 0), (1, 0))),        # W out -> west nbr's E
-        pad(space[:, 1:, W], ((0, 0), (0, 1))),         # E out -> east nbr's W
-        pad(space[:-1, :, S], ((1, 0), (0, 0))),        # N out -> north nbr's S
-        pad(space[1:, :, N], ((0, 1), (0, 0))),         # S out -> south nbr's N
+        jnp.ones(space.shape[:-1], bool),               # P (gated later)
+        pad(space[:, :, :-1, E], z1 + ((0, 0), (1, 0))),  # W out -> west nbr's E
+        pad(space[:, :, 1:, W], z1 + ((0, 0), (0, 1))),   # E out -> east nbr's W
+        pad(space[:, :-1, :, S], z1 + ((1, 0), (0, 0))),  # N out -> north nbr's S
+        pad(space[:, 1:, :, N], z1 + ((0, 1), (0, 0))),   # S out -> south nbr's N
     ], axis=-1)
 
-    # Round-robin arbitration, all five output ports at once: per output
-    # port o, the valid requester with minimal (in_port - rr[o]) mod 5 wins.
+    # Round-robin arbitration, all five output ports of both networks at
+    # once: per output port o, the valid requester with minimal
+    # (in_port - rr[o]) mod 5 wins.
     io = jnp.arange(NUM_DIRS, dtype=I32)
-    cand = (valid[..., :, None]                           # (ny, nx, in, out)
-            & (want[..., :, None] == io[None, None, None, :])
+    cand = (valid[..., :, None]                 # (2, ny, nx, in, out)
+            & (want[..., :, None] == io[None, None, None, None, :])
             & out_space[..., None, :])
     prio = (io[:, None] - rr[..., None, :]) % NUM_DIRS
     prio = jnp.where(cand, prio, NUM_DIRS + 1)
-    best = prio.min(-2)                                   # (ny, nx, out)
+    best = prio.min(-2)                         # (2, ny, nx, out)
     win = jnp.where(best <= NUM_DIRS,
                     jnp.argmin(prio, axis=-2).astype(I32), -1)
-    rr = jnp.where(win >= 0, (win + 1) % NUM_DIRS, rr)
-    has = win >= 0                                        # (ny, nx, out)
-    widx = jnp.clip(win, 0, NUM_DIRS - 1)
     # winning packet per output port: select along the *input* axis
-    # (fusible select chain instead of a gather; see _fifo_peek)
-    moved_pkt = jnp.broadcast_to(heads[..., :1], (F, ny, nx, NUM_DIRS))
+    # (fusible select chain instead of a gather; see _fifo_peek).  The
+    # P column is computed from the UNGATED winner — harmless, because
+    # every consumer masks it with the gated `has`.
+    widx = jnp.clip(win, 0, NUM_DIRS - 1)
+    moved_pkt = jnp.broadcast_to(heads[..., :1], heads.shape)
     for i in range(1, NUM_DIRS):
         moved_pkt = jnp.where(widx[None] == i, heads[..., i:i + 1],
-                              moved_pkt)                  # (F, ny, nx, out)
+                              moved_pkt)        # (F, 2, ny, nx, out)
+    return win, moved_pkt
+
+
+def _finalize(win: jax.Array, rr: jax.Array, deliver_space: jax.Array,
+              ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Apply one network's port-P deliver gate to its slice of the fused
+    arbitration result; returns (rr', pop_mask (ny,nx,in), has (ny,nx,out))
+    — bit-identical to arbitrating that network alone with the gate in
+    its candidate mask."""
+    win = win.at[..., P].set(jnp.where(deliver_space, win[..., P], -1))
+    has = win >= 0
+    rr = jnp.where(has, (win + 1) % NUM_DIRS, rr)
+    widx = jnp.clip(win, 0, NUM_DIRS - 1)
+    io = jnp.arange(NUM_DIRS, dtype=I32)
     pop = ((io[:, None] == widx[..., None, :]) & has[..., None, :]).any(-1)
-    return rr, pop, has, moved_pkt
+    return rr, pop, has
 
 
 def _neighbor_push_masks(has: jax.Array, moved_pkt: jax.Array,
@@ -369,6 +432,11 @@ def step(cfg: SimConfig, prog: Program, st: SimState,
     """One simulator cycle; returns (state', completions_this_cycle).
 
     The sub-step order matches ``MeshSim.step`` exactly — do not reorder.
+    Both networks' FIFO *counts* advance at their original points in the
+    cycle (the endpoint service step reads the reverse network's post-push
+    port-P count), but the two (large) buffer writes are deferred and
+    performed as ONE stacked write at the end — legal because nothing in
+    between reads the router buffers, only the counts.
     """
     ny, nx = cfg.ny, cfg.nx
     xs, ys = _coords(cfg)
@@ -377,28 +445,34 @@ def step(cfg: SimConfig, prog: Program, st: SimState,
     # ---- registered response port becomes visible (stats record) ----
     rv = st.reg_valid
     completed = st.completed + rv.astype(I32)
-    lat = c - st.reg_buf[_FI["tag"]]
+    tag = st.reg_buf[_FI["tag"]]
+    lat = c - tag
     lat_sum = st.lat_sum + jnp.where(rv, lat, 0)
     done_now = rv.sum().astype(I32)
     # latency histogram, gated to the measurement window by the packet's
     # injection cycle (its tag); scatter-add of 0 elsewhere is a no-op
-    tag = st.reg_buf[_FI["tag"]]
     in_win = rv & (tag >= st.measure_start) & (tag < st.measure_stop)
     lat_hist = st.lat_hist.at[jnp.clip(lat, 0, LAT_BINS - 1)].add(
         in_win.astype(I32))
 
-    # ---- reverse network: route; P deliveries are ALWAYS absorbed ----
-    rr_rev, rpop, rhas, rmoved = _arbitrate(
-        st.rev, st.rr_rev, jnp.ones((ny, nx), bool), xs, ys, st.fifo_depth)
-    rev = _fifo_pop(st.rev, rpop, st.fifo_depth)
+    # ---- both networks: ONE fused routing + arbitration pass ----
+    win2, moved2 = _arbitrate_fused(st.net, st.rr, xs, ys, st.fifo_depth)
+
+    # ---- reverse network: P deliveries are ALWAYS absorbed ----
+    rr_rev, rpop, rhas = _finalize(win2[REV], st.rr[REV],
+                                   jnp.ones((ny, nx), bool))
+    rmoved = moved2[:, REV]
+    rev_head = (st.net.head[REV] + rpop.astype(I32)) % st.fifo_depth
+    rev_count = st.net.count[REV] - rpop.astype(I32)
     absorbed, rpkt = rhas[..., P], rmoved[..., P]
     credits = st.credits + absorbed.astype(I32)
     reg_valid = absorbed
     reg_buf = jnp.where(absorbed[None], rpkt, 0)
 
     # ---- endpoint: inject pending responses into reverse P FIFO ----
-    # (folded into the same buffer write as the neighbour enqueues; the
-    # neighbour pushes never touch port P, so tails are independent)
+    # (folded into the same stacked buffer write as the neighbour
+    # enqueues; the neighbour pushes never touch port P, so tails are
+    # independent)
     L = cfg.resp_latency
     if L == 1:                    # static fast path: slot is always 0
         slot = jnp.asarray(0, I32)
@@ -409,7 +483,8 @@ def step(cfg: SimConfig, prog: Program, st: SimState,
         inj = jnp.take(st.resp_valid, slot, axis=0)
         inj_pkt = jnp.take(st.resp_buf, slot, axis=1)
     rmask_in, rpkt_in = _neighbor_push_masks(rhas, rmoved, inj, inj_pkt)
-    rev = _fifo_push(rev, rmask_in, rpkt_in, st.fifo_depth)
+    rev_tail = (rev_head + rev_count) % st.fifo_depth
+    rev_count = rev_count + rmask_in.astype(I32)
     if L == 1:
         resp_valid = jnp.zeros_like(st.resp_valid)
     else:
@@ -418,15 +493,17 @@ def step(cfg: SimConfig, prog: Program, st: SimState,
 
     # ---- endpoint: service one request/cycle (line rate) ----------
     resp_inflight = resp_valid.sum(0).astype(I32)
-    rev_space = (rev.count[..., P] + resp_inflight) < st.fifo_depth
+    rev_space = (rev_count[..., P] + resp_inflight) < st.fifo_depth
     can = (st.ep_in.count[..., 0] > 0) & rev_space
     req = _fifo_peek(st.ep_in)[..., 0]                      # (F, ny, nx)
+    req_hdr = req[_FI["hdr"]]
+    req_op = (req_hdr >> OP_SHIFT) & OP_MASK
     addr = jnp.clip(req[_FI["addr"]], 0, cfg.mem_words - 1)
     addr_oh = jnp.arange(cfg.mem_words, dtype=I32) == addr[..., None]
     cur = jnp.take_along_axis(st.mem, addr[..., None], axis=-1)[..., 0]
-    is_store = can & (req[_FI["op"]] == OP_STORE)
-    is_load = can & (req[_FI["op"]] == OP_LOAD)
-    is_cas = can & (req[_FI["op"]] == OP_CAS)
+    is_store = can & (req_op == OP_STORE)
+    is_load = can & (req_op == OP_LOAD)
+    is_cas = can & (req_op == OP_CAS)
     cas_hit = is_cas & (cur == req[_FI["cmp"]])
     newval = jnp.where(is_store | cas_hit, req[_FI["data"]], cur)
     mem = jnp.where(addr_oh & can[..., None], newval[..., None], st.mem)
@@ -435,10 +512,8 @@ def step(cfg: SimConfig, prog: Program, st: SimState,
     rdata = jnp.where(is_load | is_cas, cur, 0)
     # build the response packet: src<->dst swapped so it routes home
     resp = jnp.stack([
-        req[_FI["src_x"]], req[_FI["src_y"]],   # dst <- requester
-        xs, ys,                                 # src <- this tile
-        req[_FI["addr"]], rdata, req[_FI["cmp"]], req[_FI["op"]],
-        req[_FI["tag"]],
+        swap_for_response(req_hdr, xs, ys),
+        req[_FI["addr"]], rdata, req[_FI["cmp"]], req[_FI["tag"]],
     ])
     if L == 1:                    # resp_valid[0] was just cleared above
         resp_valid = can[None]
@@ -450,11 +525,12 @@ def step(cfg: SimConfig, prog: Program, st: SimState,
         resp_buf = resp_buf.at[:, wslot].set(
             jnp.where(can[None], resp, jnp.take(resp_buf, wslot, axis=1)))
 
-    # ---- forward network: route; P deliveries go to endpoint FIFO ----
-    rr, fpop, fhas, fmoved = _arbitrate(
-        st.fwd, st.rr, ep_in.count[..., 0] < cfg.ep_fifo, xs, ys,
-        st.fifo_depth)
-    fwd = _fifo_pop(st.fwd, fpop, st.fifo_depth)
+    # ---- forward network: P deliveries go to endpoint FIFO ----
+    rr_fwd, fpop, fhas = _finalize(win2[FWD], st.rr[FWD],
+                                   ep_in.count[..., 0] < cfg.ep_fifo)
+    fmoved = moved2[:, FWD]
+    fwd_head = (st.net.head[FWD] + fpop.astype(I32)) % st.fifo_depth
+    fwd_count = st.net.count[FWD] - fpop.astype(I32)
     got, fpkt = fhas[..., P], fmoved[..., P]
     ep_in = _fifo_push(ep_in, got[..., None], fpkt[..., None],
                        jnp.asarray(cfg.ep_fifo, I32))
@@ -462,7 +538,7 @@ def step(cfg: SimConfig, prog: Program, st: SimState,
     # ---- master injection from the per-tile program -----------------
     # The injection enqueue targets port P of the post-pop forward FIFOs
     # (neighbour pushes never touch port P), so it folds into the same
-    # buffer write as the neighbour enqueues.
+    # stacked buffer write as the neighbour enqueues.
     pending = st.prog_ptr < prog.length
     out_of_credit = st.out_of_credit_cycles + \
         (pending & (credits <= 0)).astype(I32)
@@ -474,36 +550,43 @@ def step(cfg: SimConfig, prog: Program, st: SimState,
                                    (len(PROG_FIELDS), ny, nx, 1)),
         axis=-1)[..., 0]                                    # (|PROG|, ny, nx)
     can_inj = can_inj & (entry[_PI["not_before"]] <= c)
-    can_inj = can_inj & (fwd.count[..., P] < st.fifo_depth)
+    can_inj = can_inj & (fwd_count[..., P] < st.fifo_depth)
     pkt = jnp.stack([
-        entry[_PI["dst_x"]], entry[_PI["dst_y"]],
-        xs, ys,
+        with_src(entry[_PI["hdr"]], xs, ys),
         entry[_PI["addr"]], entry[_PI["data"]], entry[_PI["cmp"]],
-        entry[_PI["op"]],
         jnp.full((ny, nx), c, I32),
     ])                                                      # (F, ny, nx)
     fmask_in, fpkt_in = _neighbor_push_masks(fhas, fmoved, can_inj, pkt)
-    fwd = _fifo_push(fwd, fmask_in, fpkt_in, st.fifo_depth)
+    fwd_tail = (fwd_head + fwd_count) % st.fifo_depth
+    fwd_count = fwd_count + fmask_in.astype(I32)
     credits = credits - can_inj.astype(I32)
     prog_ptr = st.prog_ptr + can_inj.astype(I32)
 
+    # ---- deferred stacked buffer write: both networks at once ----
+    cap = st.net.buf.shape[-1]
+    mask2 = jnp.stack([fmask_in, rmask_in])                 # (2, ny, nx, 5)
+    pkt2 = jnp.stack([fpkt_in, rpkt_in], axis=1)            # (F, 2, ny, nx, 5)
+    tail2 = jnp.stack([fwd_tail, rev_tail])
+    onehot = (jnp.arange(cap, dtype=I32) == tail2[..., None]) & mask2[..., None]
+    net = Fifo(buf=jnp.where(onehot[None], pkt2[..., None], st.net.buf),
+               head=jnp.stack([fwd_head, rev_head]),
+               count=jnp.stack([fwd_count, rev_count]))
+
     # ---- telemetry: link counts + occupancy high-water marks ----------
-    link_util_fwd = st.link_util_fwd + fhas.astype(I32)
-    link_util_rev = st.link_util_rev + rhas.astype(I32)
-    fifo_hwm_fwd = jnp.maximum(st.fifo_hwm_fwd, fwd.count)
-    fifo_hwm_rev = jnp.maximum(st.fifo_hwm_rev, rev.count)
+    link_util = st.link_util + jnp.stack([fhas, rhas]).astype(I32)
+    fifo_hwm = jnp.maximum(st.fifo_hwm, net.count)
     ep_hwm = jnp.maximum(st.ep_hwm, ep_in.count[..., 0])
 
-    st = SimState(fwd=fwd, rev=rev, ep_in=ep_in,
+    st = SimState(net=net, ep_in=ep_in,
                   resp_valid=resp_valid, resp_buf=resp_buf, mem=mem,
-                  credits=credits, rr=rr, rr_rev=rr_rev, prog_ptr=prog_ptr,
+                  credits=credits, rr=jnp.stack([rr_fwd, rr_rev]),
+                  prog_ptr=prog_ptr,
                   reg_valid=reg_valid, reg_buf=reg_buf,
                   completed=completed, lat_sum=lat_sum,
                   out_of_credit_cycles=out_of_credit,
                   cycle=c + 1, fifo_depth=st.fifo_depth,
                   max_credits=st.max_credits,
-                  link_util_fwd=link_util_fwd, link_util_rev=link_util_rev,
-                  fifo_hwm_fwd=fifo_hwm_fwd, fifo_hwm_rev=fifo_hwm_rev,
+                  link_util=link_util, fifo_hwm=fifo_hwm,
                   ep_hwm=ep_hwm, lat_hist=lat_hist,
                   measure_start=st.measure_start,
                   measure_stop=st.measure_stop)
@@ -518,53 +601,86 @@ def drained(st: SimState, prog: Program) -> jax.Array:
             & ~st.reg_valid.any())
 
 
-@functools.partial(jax.jit, static_argnums=(0, 3))
+@functools.partial(jax.jit, static_argnums=(0, 3, 4), donate_argnums=(2,))
 def simulate(cfg: SimConfig, prog: Program, state: SimState, cycles: int,
-             ) -> Tuple[SimState, jax.Array]:
+             unroll: int = 1) -> Tuple[SimState, jax.Array]:
     """Run ``cycles`` cycles under ``lax.scan``; returns
-    (final_state, completions_per_cycle (cycles,))."""
+    (final_state, completions_per_cycle (cycles,)).
+
+    ``unroll`` is passed to ``lax.scan``: N copies of the cycle step per
+    loop iteration trade compile time (more HLO) for lower loop overhead.
+    ``state`` is donated — do not reuse the argument after the call.
+    """
     def body(st, _):
         return step(cfg, prog, st)
-    return lax.scan(body, state, None, length=cycles)
+    return lax.scan(body, state, None, length=cycles, unroll=unroll)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 3))
-def run_until_drained(cfg: SimConfig, prog: Program, state: SimState,
-                      max_cycles: int = 100_000) -> Tuple[SimState, jax.Array]:
-    """Step until the global fence closes (or after ``max_cycles`` further
-    steps); returns (final_state, drain_cycle)."""
+def _drain_loop(cfg: SimConfig, prog: Program, state: SimState,
+                max_cycles: int, check_every: int, trace: bool):
+    """Shared driver for the two drain entry points: run blocks of
+    ``check_every`` cycles, checking the global fence once per block (and
+    recording the *exact* fence cycle from inside the block)."""
+    K = check_every
+    blocks = -(-max_cycles // K)
+    c0 = state.cycle
+    d0 = jnp.where(drained(state, prog), c0, -1)
+    trace0 = jnp.zeros((blocks * K if trace else 1,), I32)
+
     def cond(carry):
-        st, i = carry
-        return (~drained(st, prog)) & (i < max_cycles)
+        _st, _tr, i, dcyc = carry
+        return (dcyc < 0) & (i < blocks)
 
     def body(carry):
-        st, i = carry
-        return step(cfg, prog, st)[0], i + 1
+        st, tr, i, dcyc = carry
 
-    final, _ = lax.while_loop(cond, body, (state, jnp.asarray(0, I32)))
-    return final, final.cycle
+        def inner(c2, j):
+            st2, tr2, d2 = c2
+            st3, done = step(cfg, prog, st2)
+            if trace:
+                tr2 = tr2.at[i * K + j].set(done)
+            d2 = jnp.where((d2 < 0) & drained(st3, prog), st3.cycle, d2)
+            return (st3, tr2, d2), None
+
+        (st, tr, dcyc), _ = lax.scan(inner, (st, tr, dcyc),
+                                     jnp.arange(K, dtype=I32))
+        return st, tr, i + 1, dcyc
+
+    final, tr, nblocks, dcyc = lax.while_loop(
+        cond, body, (state, trace0, jnp.asarray(0, I32), d0))
+    steps = jnp.where(dcyc >= 0, dcyc - c0, nblocks * K)
+    return final, steps, dcyc, tr
 
 
-@functools.partial(jax.jit, static_argnums=(0, 3))
+@functools.partial(jax.jit, static_argnums=(0, 3, 4), donate_argnums=(2,))
+def run_until_drained(cfg: SimConfig, prog: Program, state: SimState,
+                      max_cycles: int = 100_000, check_every: int = 1,
+                      ) -> Tuple[SimState, jax.Array]:
+    """Step until the global fence closes (or after ``max_cycles`` further
+    steps); returns (final_state, drain_cycle).
+
+    ``check_every=K`` evaluates the fence once per K cycles: fewer
+    reductions and a K-step ``scan`` body per ``while_loop`` iteration.
+    The returned drain cycle is exact for any K; with K > 1 the *state*
+    may have stepped up to K - 1 cycles past the fence (only
+    ``SimState.cycle`` advances — a drained network is quiescent).
+    ``state`` is donated — do not reuse the argument after the call.
+    """
+    final, _steps, dcyc, _ = _drain_loop(cfg, prog, state, max_cycles,
+                                         check_every, trace=False)
+    return final, jnp.where(dcyc >= 0, dcyc, final.cycle)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3, 4), donate_argnums=(2,))
 def run_until_drained_traced(cfg: SimConfig, prog: Program, state: SimState,
-                             max_cycles: int = 100_000,
+                             max_cycles: int = 100_000, check_every: int = 1,
                              ) -> Tuple[SimState, jax.Array, jax.Array]:
     """Like :func:`run_until_drained` but also records the per-cycle
-    completion trace into a preallocated ``(max_cycles,)`` buffer; returns
+    completion trace into a preallocated buffer; returns
     (final_state, steps_taken, trace) — ``trace[:steps_taken]`` is valid."""
-    def cond(carry):
-        st, _trace, i = carry
-        return (~drained(st, prog)) & (i < max_cycles)
-
-    def body(carry):
-        st, trace, i = carry
-        st2, done = step(cfg, prog, st)
-        return st2, trace.at[i].set(done), i + 1
-
-    trace0 = jnp.zeros((max_cycles,), I32)
-    final, trace, steps = lax.while_loop(
-        cond, body, (state, trace0, jnp.asarray(0, I32)))
-    return final, steps, trace
+    final, steps, _dcyc, tr = _drain_loop(cfg, prog, state, max_cycles,
+                                          check_every, trace=True)
+    return final, steps, tr
 
 
 # ----------------------------------------------------------------------
@@ -581,13 +697,20 @@ class JaxMeshSim:
 
     Each ``run*`` call dispatches one jitted XLA program; repeated calls
     with the same static config reuse the compilation cache.
+
+    ``unroll`` / ``check_every`` are the jit tuning knobs of
+    :func:`simulate` / :func:`run_until_drained` (see their docstrings);
+    they affect speed only, never results.
     """
 
-    def __init__(self, cfg, fifo_depth=None, max_credits=None):
+    def __init__(self, cfg, fifo_depth=None, max_credits=None, *,
+                 unroll: int = 1, check_every: int = 1):
         if not isinstance(cfg, SimConfig):
             # NetConfig / repro.mesh.MeshConfig share the field names
             cfg = _simconfig_from_net(cfg)
         self.cfg = cfg
+        self.unroll = int(unroll)
+        self.check_every = int(check_every)
         self.state = init_state(cfg, fifo_depth=fifo_depth,
                                 max_credits=max_credits)
         self.program = _empty_program_for(cfg)
@@ -600,18 +723,20 @@ class JaxMeshSim:
 
     def run(self, cycles: int) -> None:
         self.state, per_cycle = simulate(self.cfg, self.program, self.state,
-                                         cycles)
+                                         cycles, self.unroll)
         self.completed_per_cycle.extend(np.asarray(per_cycle).tolist())
 
     def run_until_drained(self, max_cycles: int = 100_000) -> int:
+        cycle0 = int(self.state.cycle)
         self.state, steps, trace = run_until_drained_traced(
-            self.cfg, self.program, self.state, max_cycles)
+            self.cfg, self.program, self.state, max_cycles, self.check_every)
         steps = int(steps)
         self.completed_per_cycle.extend(np.asarray(trace[:steps]).tolist())
         if steps >= max_cycles and \
                 not bool(drained(self.state, self.program)):
             raise RuntimeError(f"network did not drain in {max_cycles} cycles")
-        return int(self.state.cycle)
+        # exact fence cycle even when check_every > 1 overshoots the state
+        return cycle0 + steps
 
     # oracle-shaped accessors -----------------------------------------
     @property
@@ -637,19 +762,19 @@ class JaxMeshSim:
     # telemetry ---------------------------------------------------------
     @property
     def link_util_fwd(self) -> np.ndarray:
-        return np.asarray(self.state.link_util_fwd, np.int64)
+        return np.asarray(self.state.link_util[FWD], np.int64)
 
     @property
     def link_util_rev(self) -> np.ndarray:
-        return np.asarray(self.state.link_util_rev, np.int64)
+        return np.asarray(self.state.link_util[REV], np.int64)
 
     @property
     def fifo_hwm_fwd(self) -> np.ndarray:
-        return np.asarray(self.state.fifo_hwm_fwd, np.int64)
+        return np.asarray(self.state.fifo_hwm[FWD], np.int64)
 
     @property
     def fifo_hwm_rev(self) -> np.ndarray:
-        return np.asarray(self.state.fifo_hwm_rev, np.int64)
+        return np.asarray(self.state.fifo_hwm[REV], np.int64)
 
     @property
     def ep_hwm(self) -> np.ndarray:

@@ -6,22 +6,35 @@ per-cycle completion traces, and every telemetry counter.  The assertion
 lives here (not in a test module) so the parity suite, the property
 fuzz, and any downstream user can share one definition of "equal".
 
-The telemetry half of the contract is now expressed through the unified
+The telemetry half of the contract is expressed through the unified
 :class:`repro.mesh.Telemetry` record, so any pair of oracle-shaped
 objects — raw ``MeshSim`` / ``JaxMeshSim`` or two
 :class:`repro.mesh.Simulator` facades on different backends — compares
 with the same code path users have.
+
+:func:`assert_packets_equal` goes one level deeper: it *decodes* the JAX
+path's packed header words (:mod:`repro.mesh.encoding`) for every
+in-flight packet — router FIFOs, endpoint request FIFOs, the response
+delay line and the registered response port — and compares them
+field-for-field against the oracle's unpacked int64 packets.  This is
+the direct witness that header packing loses no information mid-flight.
 """
 from __future__ import annotations
 
 import numpy as np
 
+from repro.mesh.encoding import HEADER_FIELDS, decode_header
 from repro.mesh.telemetry import Telemetry
 
-__all__ = ["TELEMETRY_FIELDS", "assert_state_equal", "assert_telemetry_equal"]
+__all__ = ["TELEMETRY_FIELDS", "PACKET_FIELDS", "assert_state_equal",
+           "assert_telemetry_equal", "assert_packets_equal"]
 
 TELEMETRY_FIELDS = ("link_util_fwd", "link_util_rev", "fifo_hwm_fwd",
                     "fifo_hwm_rev", "ep_hwm", "lat_hist")
+
+# every field of the oracle's packet schema; on the JAX side the first
+# five live packed inside the `hdr` lane
+PACKET_FIELDS = HEADER_FIELDS + ("addr", "data", "cmp", "tag")
 
 
 def assert_telemetry_equal(a, b) -> None:
@@ -30,12 +43,91 @@ def assert_telemetry_equal(a, b) -> None:
     Telemetry.of(a).assert_bit_identical(Telemetry.of(b))
 
 
+def _unpack_jax_packets(buf: np.ndarray) -> dict:
+    """Packed (F, ...) JAX packet lanes -> oracle-schema field dict."""
+    from repro.netsim_jax.sim import _FI
+    out = {k: v.astype(np.int64)
+           for k, v in decode_header(buf[_FI["hdr"]].astype(np.int64)).items()}
+    for k in ("addr", "data", "cmp", "tag"):
+        out[k] = buf[_FI[k]].astype(np.int64)
+    return out
+
+
+def _inflight(fields: dict, head: np.ndarray, count: np.ndarray,
+              depth: int) -> dict:
+    """Logical FIFO contents (queue order, padded with zeros past
+    ``count``) — normalizes away ring-buffer layout, which legitimately
+    differs when the oracle's capacity equals the effective depth but the
+    JAX buffer keeps the full static capacity."""
+    idx = (head[..., None] + np.arange(depth)) % depth
+    live = np.arange(depth) < count[..., None]
+    return {k: np.where(live, np.take_along_axis(v, idx, axis=-1), 0)
+            for k, v in fields.items()}
+
+
+def assert_packets_equal(a, b) -> None:
+    """Assert every in-flight packet matches field-for-field between the
+    oracle ``a`` and the JAX sim ``b`` (packed headers decoded): forward
+    and reverse router FIFOs, endpoint request FIFOs, the response delay
+    line, and the registered response port."""
+    from repro.netsim_jax.sim import FWD, REV
+    st = b.state if hasattr(b, "state") else b._sim.state
+    depth = int(np.asarray(st.fifo_depth))
+    jbuf = np.asarray(st.net.buf)
+    jhead, jcount = np.asarray(st.net.head), np.asarray(st.net.count)
+    for net_i, name in ((FWD, "fwd"), (REV, "rev")):
+        onet = getattr(a, name)
+        jf = _inflight(_unpack_jax_packets(jbuf[:, net_i]),
+                       jhead[net_i], jcount[net_i], depth)
+        of = _inflight({k: onet.f[k] for k in PACKET_FIELDS},
+                       np.asarray(onet.head), np.asarray(onet.count),
+                       onet.depth)
+        np.testing.assert_array_equal(np.asarray(onet.count), jcount[net_i],
+                                      err_msg=f"{name} FIFO count")
+        for k in PACKET_FIELDS:
+            np.testing.assert_array_equal(
+                of[k], jf[k], err_msg=f"{name} FIFO packet field {k!r}")
+    # endpoint request FIFO
+    jf = _inflight(_unpack_jax_packets(np.asarray(st.ep_in.buf)),
+                   np.asarray(st.ep_in.head), np.asarray(st.ep_in.count),
+                   a.ep_in.depth)
+    of = _inflight({k: a.ep_in.f[k] for k in PACKET_FIELDS},
+                   np.asarray(a.ep_in.head), np.asarray(a.ep_in.count),
+                   a.ep_in.depth)
+    for k in PACKET_FIELDS:
+        np.testing.assert_array_equal(of[k], jf[k],
+                                      err_msg=f"ep_in packet field {k!r}")
+    # response delay line + registered response port
+    np.testing.assert_array_equal(np.asarray(a.resp_valid),
+                                  np.asarray(st.resp_valid),
+                                  err_msg="resp_valid")
+    jresp = _unpack_jax_packets(np.asarray(st.resp_buf))
+    jreg = _unpack_jax_packets(np.asarray(st.reg_buf))
+    rv = np.asarray(a.resp_valid)
+    np.testing.assert_array_equal(np.asarray(a.reg_valid),
+                                  np.asarray(st.reg_valid),
+                                  err_msg="reg_valid")
+    for k in PACKET_FIELDS:
+        np.testing.assert_array_equal(
+            np.where(rv, np.asarray(a.resp_pkt[k]), 0),
+            np.where(rv, jresp[k], 0),
+            err_msg=f"response delay-line field {k!r}")
+        np.testing.assert_array_equal(np.asarray(a.reg_pkt[k]), jreg[k],
+                                      err_msg=f"registered port field {k!r}")
+
+
 def assert_state_equal(a, b) -> None:
     """Assert the oracle ``a`` and JAX sim ``b`` agree on all externally
-    visible state: memory, stats, completion trace, telemetry."""
+    visible state: memory, stats, completion trace, telemetry — and,
+    when ``b`` exposes a packed ``SimState``, every in-flight packet
+    field-for-field (packed vs oracle)."""
     np.testing.assert_array_equal(a.mem, b.mem)
     np.testing.assert_array_equal(a.credits, b.credits)
     np.testing.assert_array_equal(a.out_of_credit_cycles,
                                   b.out_of_credit_cycles)
     assert list(a.completed_per_cycle) == list(b.completed_per_cycle)
     assert_telemetry_equal(a, b)
+    # packet-level compare when a is oracle-backed and b jax-backed (both
+    # attribute accesses delegate through the Simulator facade)
+    if hasattr(a, "resp_pkt") and hasattr(b, "state"):
+        assert_packets_equal(a, b)

@@ -1,0 +1,286 @@
+"""The packed-header packet encoding and the fused router datapath knobs.
+
+* header encode/decode round-trips at field extremes (max mesh
+  coordinates, every opcode), as scalars and as arrays;
+* response-header swap and source-OR identities;
+* negative payload data passes through the unpacked int32 lanes
+  unchanged, end to end through a real simulation on both backends;
+* packed in-flight packets match the numpy oracle **field-for-field**
+  mid-flight (not just after drain), via
+  :func:`repro.netsim_jax.testing.assert_packets_equal`;
+* program-domain validation names the offending field, on
+  ``load_program`` and on the facade attach path of BOTH backends;
+* the ``unroll`` / ``check_every`` performance knobs change no result.
+"""
+import numpy as np
+import pytest
+
+from repro.core.netsim import OP_CAS, OP_LOAD, OP_STORE
+from repro.mesh import MeshConfig, Simulator, empty_program, make_traffic
+from repro.mesh.encoding import (COORD_LIMIT, HEADER_FIELDS, OP_LIMIT,
+                                 decode_header, pack_dst_op, pack_header,
+                                 swap_for_response, validate_program,
+                                 with_src)
+from repro.netsim_jax.testing import assert_packets_equal, assert_state_equal
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+    def given(*_a, **_k):
+        return lambda f: pytest.mark.skip(
+            reason="hypothesis not installed")(f)
+
+    def settings(*_a, **_k):
+        return lambda f: f
+
+    class st:  # noqa: N801 — placeholder strategies, never evaluated
+        @staticmethod
+        def integers(*_a, **_k):
+            return None
+
+
+# ----------------------------------------------------------------------
+# encode/decode round trips
+# ----------------------------------------------------------------------
+def _roundtrip(dst_x, dst_y, src_x, src_y, op):
+    hdr = pack_header(dst_x, dst_y, src_x, src_y, op)
+    assert 0 <= int(np.max(hdr)) < 2**30, "header must be a positive int32"
+    got = decode_header(hdr)
+    for k, want in zip(HEADER_FIELDS, (dst_x, dst_y, src_x, src_y, op)):
+        np.testing.assert_array_equal(got[k], want,
+                                      err_msg=f"field {k} corrupted")
+
+
+def test_roundtrip_field_extremes():
+    """Every corner of the field domains, including the max mesh coords
+    and all four opcode values."""
+    ext = [0, 1, COORD_LIMIT // 2, COORD_LIMIT - 2, COORD_LIMIT - 1]
+    for op in range(OP_LIMIT):
+        for c in ext:
+            _roundtrip(c, ext[-1 - ext.index(c)], c, 0, op)
+            _roundtrip(COORD_LIMIT - 1, c, 0, c, op)
+
+
+def test_roundtrip_random_arrays():
+    rng = np.random.default_rng(0)
+    n = 4096
+    args = [rng.integers(0, COORD_LIMIT, n) for _ in range(4)]
+    args.append(rng.integers(0, OP_LIMIT, n))
+    _roundtrip(*args)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, COORD_LIMIT - 1), st.integers(0, COORD_LIMIT - 1),
+       st.integers(0, COORD_LIMIT - 1), st.integers(0, COORD_LIMIT - 1),
+       st.integers(0, OP_LIMIT - 1))
+def test_roundtrip_hypothesis(dst_x, dst_y, src_x, src_y, op):
+    _roundtrip(dst_x, dst_y, src_x, src_y, op)
+
+
+def test_with_src_and_response_swap_identities():
+    """pack_dst_op + with_src == pack_header, and the response header is
+    the src<->dst swap with the servicing tile as the new source."""
+    rng = np.random.default_rng(1)
+    for _ in range(200):
+        dx, dy, sx, sy = rng.integers(0, COORD_LIMIT, 4)
+        ex, ey = rng.integers(0, COORD_LIMIT, 2)     # servicing tile
+        op = int(rng.integers(0, OP_LIMIT))
+        hdr = with_src(pack_dst_op(dx, dy, op), sx, sy)
+        assert hdr == pack_header(dx, dy, sx, sy, op)
+        resp = swap_for_response(hdr, ex, ey)
+        assert resp == pack_header(sx, sy, ex, ey, op), \
+            "response must route back to the requester with op preserved"
+
+
+def test_jax_side_decode_matches_numpy():
+    """The same shift/mask helpers produce identical values on jax arrays
+    (the in-kernel decode path)."""
+    import jax.numpy as jnp
+    rng = np.random.default_rng(2)
+    f = [rng.integers(0, COORD_LIMIT, 64) for _ in range(4)]
+    f.append(rng.integers(0, OP_LIMIT, 64))
+    hdr_np = pack_header(*f)
+    hdr_j = pack_header(*[jnp.asarray(v, jnp.int32) for v in f])
+    np.testing.assert_array_equal(hdr_np, np.asarray(hdr_j, np.int64))
+    dec = decode_header(jnp.asarray(hdr_np, jnp.int32))
+    for k, want in zip(HEADER_FIELDS, f):
+        np.testing.assert_array_equal(np.asarray(dec[k], np.int64), want)
+
+
+# ----------------------------------------------------------------------
+# negative payload passthrough on the unpacked lanes
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_negative_data_passthrough(backend):
+    """data/cmp are full int32 lanes: negative stores commit negative
+    values and negative loads return them — header packing must not
+    touch payload sign bits."""
+    nx = ny = 3
+    prog = empty_program(nx, ny, 2)
+    prog["op"][0, 0, :] = [OP_STORE, OP_LOAD]
+    prog["dst_x"][0, 0, :] = 2
+    prog["dst_y"][0, 0, :] = 1
+    prog["addr"][0, 0, :] = 5
+    prog["data"][0, 0, 0] = -123456789
+    sim = Simulator(MeshConfig(nx=nx, ny=ny), backend=backend)
+    sim.attach(prog)
+    sim.run_until_drained()
+    assert int(sim.mem[1, 2, 5]) == -123456789
+
+
+def test_negative_cas_parity():
+    """CAS with negative compare/swap values: bit-identical across
+    backends (cmp is an unpacked lane too)."""
+    nx = ny = 3
+    prog = empty_program(nx, ny, 2)
+    prog["op"][0, 0, :] = [OP_STORE, OP_CAS]
+    prog["dst_x"][0, 0, :] = 1
+    prog["addr"][0, 0, :] = 3
+    prog["data"][0, 0, :] = [-7, -9]
+    prog["cmp"][0, 0, 1] = -7                      # hits: -7 was stored
+    cfg = MeshConfig(nx=nx, ny=ny)
+    a = Simulator(cfg, backend="numpy")
+    a.attach({k: v.copy() for k, v in prog.items()})
+    b = Simulator(cfg, backend="jax")
+    b.attach(prog)
+    a.run_until_drained()
+    b.run_until_drained()
+    assert_state_equal(a, b)
+    assert int(a.mem[0, 1, 3]) == -9
+
+
+# ----------------------------------------------------------------------
+# packed vs oracle packets, field for field, MID-flight
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("pattern", ["uniform", "hotspot"])
+def test_packed_packets_match_oracle_midflight(pattern):
+    """Stop the clock while traffic is in flight and compare every queued
+    packet (router FIFOs, endpoint FIFOs, response delay line, registered
+    port) decoded-field by decoded-field against the oracle."""
+    cfg = MeshConfig(nx=4, ny=4, max_out_credits=8, router_fifo=3,
+                     resp_latency=2)
+    entries = make_traffic(pattern, 4, 4, 12, rate=0.9, seed=5)
+    a = Simulator(cfg, backend="numpy")
+    a.attach({k: v.copy() for k, v in entries.items()})
+    b = Simulator(cfg, backend="jax")
+    b.attach(entries)
+    saw_inflight = False
+    for cycles in (3, 5, 8, 13, 21):
+        a.run(cycles)
+        b.run(cycles)
+        assert_packets_equal(a, b)
+        inflight = int(np.asarray(a.fwd.count).sum()
+                       + np.asarray(a.rev.count).sum()
+                       + np.asarray(a.ep_in.count).sum())
+        saw_inflight |= inflight > 0
+    assert saw_inflight, "test never observed an in-flight packet"
+
+
+# ----------------------------------------------------------------------
+# domain validation: one clear error naming the offending field
+# ----------------------------------------------------------------------
+def _prog_with(field, value, nx=4, ny=4):
+    prog = make_traffic("neighbor", nx, ny, 2, seed=0)
+    prog[field] = prog[field].copy()
+    prog[field][0, 0, 0] = value
+    return prog
+
+
+def test_load_program_rejects_wide_coords_and_op():
+    from repro.netsim_jax import load_program
+    with pytest.raises(ValueError, match=r"'dst_x'.*packed header"):
+        load_program(_prog_with("dst_x", COORD_LIMIT))
+    with pytest.raises(ValueError, match=r"'dst_y'.*packed header"):
+        load_program(_prog_with("dst_y", -1))
+    with pytest.raises(ValueError, match=r"'op'.*opcode"):
+        load_program(_prog_with("op", OP_LIMIT))
+
+
+def test_load_program_rejects_int32_overflow_naming_field():
+    from repro.netsim_jax import load_program
+    for field in ("addr", "data", "cmp", "not_before"):
+        with pytest.raises(ValueError, match=f"'{field}'.*int32"):
+            load_program(_prog_with(field, 2**40))
+
+
+def test_load_program_ignores_padding_entries():
+    """Out-of-width values on op<0 padding rows are never injected and
+    must not be rejected."""
+    from repro.netsim_jax import load_program
+    prog = make_traffic("neighbor", 3, 3, 2, seed=0)
+    prog["op"][0, 0, :] = -1
+    prog["dst_x"][0, 0, :] = 10_000
+    load_program(prog)                               # no raise
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_facade_attach_validates_both_backends(backend):
+    """One packet-domain contract at the front door: the numpy oracle
+    rejects the same programs the packed jax path cannot represent —
+    including in-width coordinates that fall outside the mesh."""
+    sim = Simulator(MeshConfig(nx=4, ny=4), backend=backend)
+    with pytest.raises(ValueError, match=r"'dst_x'.*4x4 mesh"):
+        sim.attach(_prog_with("dst_x", 5))           # < COORD_LIMIT, > nx
+    with pytest.raises(ValueError, match=r"'data'.*int32"):
+        sim.attach(_prog_with("data", 2**35))
+
+
+def test_validate_program_accepts_full_domain():
+    prog = make_traffic("uniform", 8, 8, 4, seed=3)
+    prog["data"][:] = np.iinfo(np.int32).min         # extreme but legal
+    validate_program(prog)
+    validate_program(prog, nx=8, ny=8)
+
+
+def test_simconfig_rejects_oversize_mesh():
+    from repro.netsim_jax import SimConfig
+    with pytest.raises(ValueError, match="packed header"):
+        SimConfig(nx=COORD_LIMIT + 1, ny=1)
+    SimConfig(nx=COORD_LIMIT, ny=1)                  # boundary accepted
+
+
+# ----------------------------------------------------------------------
+# unroll / check_every: speed knobs, never results
+# ----------------------------------------------------------------------
+def test_unroll_is_bit_identical():
+    cfg = MeshConfig(nx=4, ny=4, max_out_credits=4)
+    entries = make_traffic("uniform", 4, 4, 8, rate=0.6, seed=7)
+    a = Simulator(cfg, backend="jax")
+    a.attach({k: v.copy() for k, v in entries.items()})
+    b = Simulator(cfg, backend="jax", unroll=4)
+    b.attach(entries)
+    a.run(100)
+    b.run(100)
+    from repro.netsim_jax.testing import assert_telemetry_equal
+    assert_telemetry_equal(a, b)
+    np.testing.assert_array_equal(np.asarray(a.mem), np.asarray(b.mem))
+
+
+@pytest.mark.parametrize("check_every", [3, 8])
+def test_check_every_reports_exact_drain_cycle(check_every):
+    """The K-cycle fence cadence must still report the exact drain cycle
+    (the state may coast past it; the fence cycle may not move)."""
+    cfg = MeshConfig(nx=4, ny=3, max_out_credits=4)
+    entries = make_traffic("tornado", 4, 3, 6, seed=9)
+    exact = Simulator(cfg, backend="numpy")
+    exact.attach({k: v.copy() for k, v in entries.items()})
+    coarse = Simulator(cfg, backend="jax", check_every=check_every)
+    coarse.attach(entries)
+    ce = exact.run_until_drained()
+    cc = coarse.run_until_drained()
+    assert ce == cc, f"check_every={check_every} moved the drain cycle"
+    np.testing.assert_array_equal(np.asarray(exact.mem),
+                                  np.asarray(coarse.mem))
+    np.testing.assert_array_equal(np.asarray(exact.completed),
+                                  np.asarray(coarse.completed))
+    # completion traces agree on the drained prefix
+    assert list(exact.completed_per_cycle) == \
+        list(coarse.completed_per_cycle)[:len(exact.completed_per_cycle)]
+
+
+def test_knob_validation():
+    with pytest.raises(ValueError, match="unroll and check_every"):
+        Simulator(MeshConfig(nx=2, ny=2), backend="jax", unroll=0)
