@@ -1,0 +1,133 @@
+"""Workload-compiler benchmarks: the model stack's traffic on the mesh.
+
+All four workload families (ring all-reduce, MoE all-to-all, pipeline
+p2p, PGAS scatter) run on an 8x8 mesh with ``backend="both"`` — every
+record is simultaneously a numpy-vs-jax bit-identical parity check (the
+runner raises on any divergence) and a cycles-per-step measurement.  The
+full :class:`~repro.workloads.WorkloadReport` rides along under
+``"report"`` so ``benchmarks/run.py`` can persist the set as
+``experiments/workload_reports.json``; the trajectory file tracks the
+wall/ok fields PR-over-PR as usual.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.workloads import (CongestionModel, moe_all_to_all, pgas_scatter,
+                             pipeline_p2p, ring_all_reduce, run_workload)
+
+__all__ = ["bench_ring_allreduce", "bench_moe_a2a", "bench_pipeline",
+           "bench_pgas", "bench_congestion_fit", "run"]
+
+NX = NY = 8
+
+
+def _rec(name: str, report, **extra) -> Dict:
+    d = {"name": name, "mesh": report.mesh, "cycles": report.cycles,
+         "cycles_per_step": report.cycles_per_step,
+         "accepted_throughput": report.accepted_throughput,
+         "mean_latency": report.mean_latency,
+         "peak_link_util": report.peak_link_util,
+         "parity": report.backend == "both",
+         "report": report.to_json()}
+    d.update(extra)
+    return d
+
+
+def bench_ring_allreduce(words: int = 64) -> Dict:
+    """8x8 snake-ring all-reduce: 2(k-1) phases, chunk packets per rank
+    per phase.  ok gates on full delivery at a sane per-step cost: each
+    phase must cost at least ``chunk`` cycles (link serialization) and
+    the run must not be orders beyond that bound (uncongested ring)."""
+    w = ring_all_reduce(NX, NY, words)
+    r = run_workload(w, backend="both")
+    chunk = w.meta["chunk"]
+    ok = (r.delivered == r.injected
+          and r.cycles_per_step >= chunk
+          and r.cycles_per_step <= 16 * chunk + 16)
+    return _rec("workload_ring_allreduce_8x8", r, words=words,
+                chunk=chunk, steps=w.n_steps, ok=ok)
+
+
+def bench_moe_a2a(tokens_per_tile: int = 8) -> Dict:
+    """8x8 MoE token all-to-all, uniform vs hot-expert (imbalance=0.5).
+    The skewed run concentrates traffic on the hot expert's tile, so it
+    must cost at least as many cycles and show a hotter peak link."""
+    uni = run_workload(moe_all_to_all(NX, NY, tokens_per_tile,
+                                      imbalance=0.0, seed=0),
+                       backend="both")
+    hot = run_workload(moe_all_to_all(NX, NY, tokens_per_tile,
+                                      imbalance=0.5, seed=0),
+                       backend="both")
+    ok = (hot.cycles >= uni.cycles
+          and hot.peak_link_util >= uni.peak_link_util
+          and hot.delivered == hot.injected)
+    return _rec("workload_moe_a2a_8x8", hot,
+                tokens_per_tile=tokens_per_tile,
+                uniform_cycles=uni.cycles, hot_cycles=hot.cycles,
+                hot_expert_share=hot.meta.get("hot_expert_share"),
+                uniform_report=uni.to_json(), ok=ok)
+
+
+def bench_pipeline(n_micro: int = 8, act_words: int = 8) -> Dict:
+    """64-stage forward+backward microbatch pipeline over the snake."""
+    w = pipeline_p2p(NX, NY, n_micro=n_micro, act_words=act_words,
+                     backward=True)
+    r = run_workload(w, backend="both")
+    ok = r.delivered == r.injected and r.cycles >= w.n_steps
+    return _rec("workload_pipeline_8x8", r, n_micro=n_micro,
+                act_words=act_words,
+                bubble_fraction=w.meta["bubble_fraction"], ok=ok)
+
+
+def bench_pgas(slots: int = 8) -> Dict:
+    """PGAS scatter: every tile stores ``slots`` words to rotated peers."""
+    w = pgas_scatter(NX, NY, slots)
+    r = run_workload(w, backend="both")
+    ok = r.delivered == r.injected
+    return _rec("workload_pgas_scatter_8x8", r, slots=slots, ok=ok)
+
+
+def bench_congestion_fit() -> Dict:
+    """Fit a CongestionModel from 8x8 reports and check the closed loop:
+    the netsim roofline collective term must come from simulated cycles
+    (differ from the analytic wire-bytes/bandwidth estimate)."""
+    from repro.launch import roofline as rl
+    from repro.workloads import calibrate
+
+    cm = calibrate(NX, NY, backend="numpy")
+    colls = {"all-reduce": {"bytes": 1e9, "count": 2, "wire_bytes": 1.5e9},
+             "all-to-all": {"bytes": 2e8, "count": 4, "wire_bytes": 1.9e8}}
+    analytic_s = sum(d["bytes"] for d in colls.values()) / rl.HW.ICI_BW
+    sim = cm.collective_times(colls)
+    netsim_s = sum(d["sim_s"] for d in sim.values())
+    ok = (all(a > 0 for a, _ in cm.coeffs.values())
+          and netsim_s > 0 and netsim_s != analytic_s)
+    return {"name": "workload_congestion_fit_8x8", "mesh": f"{NX}x{NY}",
+            "coeffs": {k: [round(a, 3), round(b, 3)]
+                       for k, (a, b) in cm.coeffs.items()},
+            "n_points": dict(cm.n_points),
+            "analytic_collective_s": round(analytic_s, 6),
+            "netsim_collective_s": round(netsim_s, 6),
+            "congestion_model": cm.to_json(), "ok": ok}
+
+
+def run() -> List[Dict]:
+    out = []
+    for fn in (bench_ring_allreduce, bench_moe_a2a, bench_pipeline,
+               bench_pgas, bench_congestion_fit):
+        t0 = time.perf_counter()
+        rec = fn()
+        rec["wall_s"] = round(time.perf_counter() - t0, 2)
+        out.append(rec)
+        status = "OK " if rec.get("ok") else "FAIL"
+        brief = {k: v for k, v in rec.items()
+                 if k not in ("report", "uniform_report",
+                              "congestion_model")}
+        print(f"[{status}] {rec['name']:32s} {brief}", flush=True)
+    return out
+
+
+if __name__ == "__main__":
+    run()

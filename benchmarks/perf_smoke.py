@@ -9,7 +9,12 @@ A fraction of the full benchmark battery, sized for a CI job:
   global drain fence on both backends and compared with the full
   ``assert_state_equal`` contract (memory, stats, traces, telemetry, and
   decoded in-flight packets field-for-field) — catches datapath
-  *correctness* regressions without waiting for the full test suite.
+  *correctness* regressions without waiting for the full test suite;
+* a workloads smoke: a 4x4 ring all-reduce and one MoE all-to-all from
+  the workload traffic compiler, each run on BOTH backends with the
+  bit-identical telemetry assert — catches regressions in the
+  compile -> attach -> drain -> report loop the cost model's netsim mode
+  depends on.
 
   PYTHONPATH=src python -m benchmarks.perf_smoke
 
@@ -66,8 +71,34 @@ def parity_grid() -> List[Dict]:
     return out
 
 
+def workloads_smoke() -> List[Dict]:
+    """4x4 ring all-reduce + MoE all-to-all, parity-checked on both
+    backends (run_workload raises on any telemetry divergence)."""
+    from repro.workloads import moe_all_to_all, ring_all_reduce, run_workload
+    out = []
+    for w in (ring_all_reduce(4, 4, 16),
+              moe_all_to_all(4, 4, 4, imbalance=0.5, seed=0)):
+        t0 = time.perf_counter()
+        ok = True
+        err = ""
+        cycles = -1
+        try:
+            r = run_workload(w, backend="both")
+            cycles = r.cycles
+            ok = r.delivered == r.injected
+        except AssertionError as e:
+            head = str(e).strip().splitlines()
+            ok, err = False, head[0] if head else "?"
+        out.append({"name": f"workload_{w.family}_4x4", "ok": ok,
+                    "drain_cycle": cycles,
+                    "wall_s": round(time.perf_counter() - t0, 2),
+                    **({"error": err} if err else {})})
+    return out
+
+
 def main() -> int:
     records = parity_grid()
+    records.extend(workloads_smoke())
     micro = bench_step_throughput(shapes=((4, 4),), cycles=800,
                                   oracle_cycles=100)
     m = micro["meshes"]["4x4"]

@@ -26,7 +26,8 @@ import time
 from pathlib import Path
 from typing import Dict, List
 
-SUITES = ("netsim", "netsim_jax", "collectives", "kernels", "train")
+SUITES = ("netsim", "netsim_jax", "workloads", "collectives", "kernels",
+          "train")
 
 # trajectory entries keep only the timing/health fields, not full payloads
 _TRAJECTORY_KEYS = ("wall_s", "compile_s", "run_s", "wall_s_incl_compile",
@@ -116,6 +117,14 @@ def main(argv=None) -> int:
         with open(out / "load_latency.json", "w") as f:
             json.dump(sweeps[0], f, indent=1, default=str)
         print(f"wrote {out / 'load_latency.json'}")
+    # standalone artifact: the parity-checked workload reports + fitted
+    # congestion model from the workloads suite
+    wl = [r for r in results.get("workloads", [])
+          if "report" in r or "congestion_model" in r]
+    if wl:
+        with open(out / "workload_reports.json", "w") as f:
+            json.dump(wl, f, indent=1, default=str)
+        print(f"wrote {out / 'workload_reports.json'}")
     # PR-over-PR timing trajectory (appended, never overwritten)
     print(f"appended {append_trajectory(out, trajectory_entry(results, wall))}")
     if crashed:

@@ -14,25 +14,23 @@ import argparse
 import json
 from pathlib import Path
 
-import numpy as np
+from repro.mesh import Simulator, make_traffic
+from repro.netsim_jax import (DEFAULT_SWEEP_RATES, PATTERNS, ascii_curve,
+                              curve_record, load_latency_sweep, sweep_config)
 
-from repro.netsim_jax import (DEFAULT_SWEEP_RATES, PATTERNS, curve_record,
-                              load_latency_sweep, sweep_config)
 
-
-def ascii_curve(rates, lat, sat_idx, width: int = 50) -> str:
-    """One bar per offered load, length ~ log latency, knee marked."""
-    lat = np.asarray(lat, float)
-    # a rate whose window delivered nothing measures lat 0; clamp the bar
-    # scale so the log stays finite instead of aborting the whole figure
-    clamped = np.maximum(lat, 1.0)
-    scale = width / max(np.log10(clamped.max() / clamped.min()), 1e-9)
-    rows = []
-    for i, (r, l, lc) in enumerate(zip(rates, lat, clamped)):
-        bar = "#" * max(int(np.log10(lc / clamped.min()) * scale), 1)
-        mark = "  <- saturation" if i == sat_idx else ""
-        rows.append(f"    {r:5.2f} | {bar:<{width}s} {l:8.1f}{mark}")
-    return "\n".join(rows)
+def saturation_heatmap(pattern: str, cfg, rate: float,
+                       cycles: int = 400, seed: int = 0) -> str:
+    """Link-utilization heatmap at one offered load: rerun the pattern for
+    a fixed window on the oracle and render the telemetry."""
+    sim = Simulator(cfg, backend="numpy", seed=seed)
+    length = int(rate * cycles) + 1
+    sim.attach(make_traffic(pattern, cfg.nx, cfg.ny, length,
+                            rate=rate, seed=seed))
+    sim.run(cycles)
+    return sim.telemetry().heatmap_str(
+        "fwd", title=f"    link utilization at rate {rate:.2f} "
+                     f"(fwd network, {cycles} cycles):")
 
 
 def main() -> None:
@@ -68,6 +66,12 @@ def main() -> None:
               f"{out['saturation_throughput']:.3f} pkts/cycle/tile")
         print("    rate  | mean round-trip latency (log scale, cycles)")
         print(ascii_curve(out["rates"], out["lat_mean"], sat))
+        # where the congestion lives: per-link heatmap at the knee (or the
+        # highest swept load if the pattern never saturated)
+        hm_rate = out["saturation_rate"] if sat is not None \
+            else float(out["rates"][-1])
+        print(saturation_heatmap(name, cfg, hm_rate,
+                                 cycles=args.measure, seed=0))
         results[name] = curve_record(out)
 
     dest = Path(__file__).resolve().parents[1] / "experiments"

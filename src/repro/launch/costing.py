@@ -31,7 +31,21 @@ from repro.configs.base import ModelConfig, ShapeConfig
 from . import roofline as rl
 from . import step as step_mod
 
-__all__ = ["reduced_depth_cfg", "scan_trips", "measure_cell_cost"]
+__all__ = ["reduced_depth_cfg", "scan_trips", "measure_cell_cost",
+           "netsim_collectives"]
+
+
+def netsim_collectives(colls: Dict[str, Dict[str, float]],
+                       congestion) -> Dict[str, Dict[str, float]]:
+    """Annotate a parsed-collectives dict with simulated network timing.
+
+    ``congestion`` is a fitted :class:`repro.workloads.CongestionModel`;
+    every op entry gains ``sim_cycles`` / ``sim_s`` / ``family`` next to
+    the analytic ``bytes`` / ``wire_bytes`` — the numbers
+    ``roofline(..., network="netsim")`` prices the collective term with.
+    """
+    sim = congestion.collective_times(colls)
+    return {op: {**d, **sim.get(op, {})} for op, d in colls.items()}
 
 
 def reduced_depth_cfg(cfg: ModelConfig, n_units: int) -> ModelConfig:
@@ -172,7 +186,8 @@ def analytic_memory(cfg: ModelConfig, shape: ShapeConfig, rules,
 
 
 def measure_cell_cost(cfg: ModelConfig, shape: ShapeConfig, mesh,
-                      strategy: str = "baseline", **rule_overrides
+                      strategy: str = "baseline", *, congestion=None,
+                      **rule_overrides
                       ) -> Tuple[Dict[str, float], Dict[str, Dict[str, float]]]:
     """Returns (cost, collectives), per-device, extrapolated to full depth.
 
@@ -180,6 +195,9 @@ def measure_cell_cost(cfg: ModelConfig, shape: ShapeConfig, mesh,
     (mixer-core HLO traffic replaced by the Pallas-kernel traffic — the
     TPU-target number; decode cells need no adjustment: their dominant
     traffic, the KV-cache read, is real HBM traffic on TPU too).
+
+    Pass a fitted ``congestion`` model to get the collectives dict back
+    already annotated with simulated timing (:func:`netsim_collectives`).
     """
     ((f1, b1, c1), (f2, b2, c2)), n2 = _measure_variants(
         cfg, shape, mesh, strategy, **rule_overrides)
@@ -213,4 +231,6 @@ def measure_cell_cost(cfg: ModelConfig, shape: ShapeConfig, mesh,
         d1 = c1.get(op, {"bytes": 0.0, "count": 0, "wire_bytes": 0.0})
         d2 = c2.get(op, {"bytes": 0.0, "count": 0, "wire_bytes": 0.0})
         colls[op] = {k: extra(d1[k], d2[k]) for k in d1}
+    if congestion is not None:
+        colls = netsim_collectives(colls, congestion)
     return cost, colls

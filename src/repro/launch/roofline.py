@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import functools
 import json
 import re
 from pathlib import Path
@@ -29,7 +30,12 @@ from typing import Dict, List, Optional, Tuple
 from .mesh import HW
 
 __all__ = ["parse_collectives", "roofline", "RooflineReport", "model_flops",
-           "DTYPE_BYTES"]
+           "DTYPE_BYTES", "NETWORK_MODES", "default_congestion_model"]
+
+# collective-term pricing: "analytic" divides wire bytes by the nominal
+# link bandwidth; "netsim" prices them with cycles measured on the
+# cycle-level mesh simulator (a fitted repro.workloads.CongestionModel)
+NETWORK_MODES = ("analytic", "netsim")
 
 DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -146,6 +152,7 @@ class RooflineReport:
     useful_ratio: float
     peak_step_s: float
     roofline_frac: float             # compute_s / peak_step_s
+    network: str = "analytic"        # how collective_s was priced
 
     def to_json(self) -> dict:
         return dataclasses.asdict(self)
@@ -157,9 +164,32 @@ class RooflineReport:
                 f"roofline {self.roofline_frac:5.1%} useful {self.useful_ratio:6.1%}")
 
 
+@functools.lru_cache(maxsize=None)
+def default_congestion_model(nx: int = 8, ny: int = 8):
+    """The congestion model ``network="netsim"`` falls back to when the
+    caller does not supply one: the standard calibration battery on an
+    ``nx x ny`` mesh, numpy oracle, cached per mesh size (calibration
+    runs the simulator, so it costs seconds the first time)."""
+    from repro.workloads import calibrate
+    return calibrate(nx, ny, backend="numpy")
+
+
 def roofline(cfg, shape, mesh_name: str, chips: int,
-             cost: Dict[str, float], colls) -> RooflineReport:
-    """``colls``: pre-parsed collectives dict, or raw HLO text."""
+             cost: Dict[str, float], colls, *,
+             network: str = "analytic",
+             congestion=None) -> RooflineReport:
+    """``colls``: pre-parsed collectives dict, or raw HLO text.
+
+    ``network="netsim"`` replaces the analytic collective term
+    (bytes / nominal link bandwidth) with cycles from a
+    :class:`repro.workloads.CongestionModel` — pass one as ``congestion``
+    or the cached :func:`default_congestion_model` is fit on first use.
+    Each ``coll_detail`` entry then also carries ``sim_cycles`` /
+    ``sim_s`` / ``family``.
+    """
+    if network not in NETWORK_MODES:
+        raise ValueError(f"network must be one of {NETWORK_MODES}, "
+                         f"got {network!r}")
     flops_dev = float(cost.get("flops", 0.0))
     bytes_dev = float(cost.get("bytes accessed", 0.0))
     bytes_adj = float(cost.get("bytes adjusted", bytes_dev))
@@ -171,7 +201,14 @@ def roofline(cfg, shape, mesh_name: str, chips: int,
     compute_s = flops_dev / HW.PEAK_FLOPS_BF16
     memory_s = bytes_dev / HW.HBM_BW
     memory_adj_s = bytes_adj / HW.HBM_BW
-    collective_s = coll_dev / HW.ICI_BW
+    if network == "netsim":
+        if congestion is None:
+            congestion = default_congestion_model()
+        sim = congestion.collective_times(colls)
+        colls = {op: {**d, **sim.get(op, {})} for op, d in colls.items()}
+        collective_s = sum(d["sim_s"] for d in sim.values())
+    else:
+        collective_s = coll_dev / HW.ICI_BW
     terms = {"compute": compute_s, "memory": memory_adj_s,
              "collective": collective_s}
     bottleneck = max(terms, key=terms.get)
@@ -191,6 +228,7 @@ def roofline(cfg, shape, mesh_name: str, chips: int,
         useful_ratio=(mf / total_flops) if total_flops else 0.0,
         peak_step_s=peak,
         roofline_frac=(compute_s / peak) if peak else 0.0,
+        network=network,
     )
 
 

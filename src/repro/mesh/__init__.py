@@ -26,13 +26,14 @@ from .endpoint import (DmaEndpoint, Endpoint,  # noqa: F401
                        MemoryControllerEndpoint, ProgramEndpoint, Request,
                        Response, trace_to_program)
 from .simulator import BACKENDS, Simulator  # noqa: F401
-from .telemetry import TELEMETRY_ARRAY_FIELDS, Telemetry  # noqa: F401
+from .telemetry import (PORT_NAMES, TELEMETRY_ARRAY_FIELDS,  # noqa: F401
+                        Telemetry, render_heatmap)
 from .traffic import (PATTERNS, PROG_KEYS, bit_complement,  # noqa: F401
                       empty_program, hotspot, make_traffic,
                       nearest_neighbor, tornado, transpose, uniform_random)
 
 __all__ = ["MeshConfig", "Simulator", "BACKENDS", "Telemetry",
-           "encoding", "validate_program",
+           "encoding", "validate_program", "PORT_NAMES", "render_heatmap",
            "TELEMETRY_ARRAY_FIELDS", "Endpoint", "Request", "Response",
            "ProgramEndpoint", "DmaEndpoint", "MemoryControllerEndpoint",
            "trace_to_program", "PATTERNS", "PROG_KEYS", "empty_program",

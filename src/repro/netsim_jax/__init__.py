@@ -15,10 +15,10 @@ code; this package remains the functional JAX layer it drives
 """
 from . import measure, sim, traffic  # noqa: F401
 from .measure import (DEFAULT_SWEEP_RATES, PhaseStats,  # noqa: F401
-                      compile_sweep, curve_is_monotone, curve_record,
-                      hist_quantile, load_latency_sweep, measure_program,
-                      phased_stats, saturation_point, stack_rate_programs,
-                      sweep_config)
+                      ascii_curve, compile_sweep, curve_is_monotone,
+                      curve_record, hist_quantile, load_latency_sweep,
+                      measure_program, phased_stats, saturation_point,
+                      stack_rate_programs, sweep_config)
 from .sim import (FWD, REV, JaxMeshSim, Program, SimConfig,  # noqa: F401
                   SimState, drained, empty_program_for, init_state,
                   load_program, run_until_drained, run_until_drained_traced,
@@ -32,6 +32,7 @@ __all__ = ["JaxMeshSim", "Program", "SimConfig", "SimState", "drained",
            "PATTERNS", "empty_program", "make_traffic",
            "DEFAULT_SWEEP_RATES", "PhaseStats", "compile_sweep",
            "curve_is_monotone",
+           "ascii_curve",
            "curve_record", "hist_quantile", "load_latency_sweep",
            "measure_program", "phased_stats", "saturation_point",
            "stack_rate_programs", "sweep_config"]

@@ -49,7 +49,7 @@ __all__ = ["PhaseStats", "phased_stats", "measure_program",
            "stack_rate_programs", "load_latency_sweep", "saturation_point",
            "curve_is_monotone", "curve_record", "hist_quantile",
            "compile_sweep", "SATURATION_FACTOR", "DEFAULT_SWEEP_RATES",
-           "sweep_config"]
+           "sweep_config", "ascii_curve"]
 
 # mean latency >= SATURATION_FACTOR * zero-load latency <=> saturated
 SATURATION_FACTOR = 3.0
@@ -174,6 +174,23 @@ def stack_rate_programs(pattern: str, nx: int, ny: int,
                                        rate=float(r), **traffic_kw))
              for r in rates]
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *progs)
+
+
+def ascii_curve(rates, lat, sat_idx, width: int = 50) -> str:
+    """ASCII load–latency figure: one bar per offered load, bar length ~
+    log latency, saturation knee marked.  Shared by
+    ``examples/load_latency.py`` and anything else that prints a sweep."""
+    lat = np.asarray(lat, float)
+    # a rate whose window delivered nothing measures lat 0; clamp the bar
+    # scale so the log stays finite instead of aborting the whole figure
+    clamped = np.maximum(lat, 1.0)
+    scale = width / max(np.log10(clamped.max() / clamped.min()), 1e-9)
+    rows = []
+    for i, (r, l, lc) in enumerate(zip(rates, lat, clamped)):
+        bar = "#" * max(int(np.log10(lc / clamped.min()) * scale), 1)
+        mark = "  <- saturation" if i == sat_idx else ""
+        rows.append(f"    {r:5.2f} | {bar:<{width}s} {l:8.1f}{mark}")
+    return "\n".join(rows)
 
 
 def saturation_point(lat_mean: np.ndarray,

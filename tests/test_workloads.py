@@ -1,0 +1,270 @@
+"""Workload traffic compiler: placement, program lowering, conservation,
+collective exactness, cross-backend parity, and the congestion-fed
+roofline loop."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.netsim import OP_STORE, MeshSim
+from repro.launch import roofline as rl
+from repro.mesh import MeshConfig, Simulator
+from repro.workloads import (CongestionModel, Packet, Placement, Workload,
+                             expected_memory, merge_workloads,
+                             moe_all_to_all, parameter_broadcast,
+                             pgas_from_batches, pgas_scatter, pipeline_p2p,
+                             program_from_packets, ring_all_reduce,
+                             run_workload, snake_order)
+from repro.workloads.runner import default_workload_config
+
+
+# ---------------------------------------------------------------- placement
+
+def test_snake_order_neighbors_adjacent():
+    coords = [tuple(c) for c in snake_order(4, 3)]
+    assert len(coords) == 12 and len(set(coords)) == 12
+    for (x0, y0), (x1, y1) in zip(coords, coords[1:]):
+        assert abs(x0 - x1) + abs(y0 - y1) == 1
+
+
+def test_placement_ring_hops():
+    p = Placement.ring(4, 4)
+    assert p.k == 16
+    # consecutive snake ranks are mesh neighbors...
+    assert all(p.ring_hop_length(r) == 1 for r in range(p.k - 1))
+    # ...and the wrap-around hop walks back up the column
+    assert p.ring_hop_length(p.k - 1) == 3
+
+
+def test_placement_validation():
+    with pytest.raises(ValueError):
+        Placement(2, 2, ((0, 0), (5, 0)))          # off-mesh
+    with pytest.raises(ValueError):
+        Placement(2, 2, ((0, 0), (0, 0)))          # duplicate tile
+
+
+# ------------------------------------------------------- program lowering
+
+def test_program_from_packets_sorts_and_pads():
+    pkts = [Packet(src_x=0, src_y=0, dst_x=1, dst_y=0, addr=0,
+                   not_before=9),
+            Packet(src_x=0, src_y=0, dst_x=1, dst_y=0, addr=1,
+                   not_before=2)]
+    prog = program_from_packets(2, 1, pkts)
+    # per-tile slots are sorted by not_before (injection is slot-order)
+    assert prog["not_before"][0, 0, 0] == 2
+    assert prog["not_before"][0, 0, 1] == 9
+    assert prog["addr"][0, 0, 0] == 1
+    # tiles with no packets are all padding
+    assert (prog["op"][0, 1] < 0).all()
+
+
+def test_workload_counts_validated():
+    pkts = [Packet(src_x=0, src_y=0, dst_x=1, dst_y=0, addr=0)]
+    prog = program_from_packets(2, 1, pkts)
+    with pytest.raises(ValueError):
+        Workload(name="bad", family="x", nx=2, ny=1, program=prog,
+                 n_steps=1, n_packets=7)
+
+
+# ----------------------------------------------------------- conservation
+
+def test_conservation_mid_run_and_at_drain():
+    """At every cycle boundary: injected == delivered + in-flight; at the
+    drain fence every injected packet has been delivered."""
+    w = ring_all_reduce(4, 4, 16)
+    sim = MeshSim(default_workload_config(4, 4).to_net(), seed=0)
+    sim.load_program({k: v.copy() for k, v in w.program.items()})
+    for _ in range(30):
+        for _ in range(5):
+            sim.step()
+        injected = int(sim.prog_ptr.sum())
+        in_flight = (int(sim.fwd.count.sum()) + int(sim.ep_in.count.sum())
+                     + int(sim.resp_valid.sum()) + int(sim.rev.count.sum())
+                     + int(sim.reg_valid.sum()))
+        delivered = int(sim.completed.sum())
+        assert injected == delivered + in_flight, \
+            f"packet leak at cycle {sim.cycle}: injected {injected} != " \
+            f"delivered {delivered} + in-flight {in_flight}"
+    sim.run_until_drained()
+    assert int(sim.completed.sum()) == w.n_packets
+
+
+# --------------------------------------------- all-reduce ring exactness
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_allreduce_delivers_exact_ring_traffic(backend):
+    """Each ring rank sends and receives exactly 2(k-1) chunks — i.e.
+    2(k-1)/k of the padded payload — and total link traversals equal
+    packets x ring-hop lengths (XY routes of neighbor hops are the hops
+    themselves)."""
+    nx = ny = 4
+    w = ring_all_reduce(nx, ny, 16)          # k=16, chunk=1
+    k, chunk = w.meta["k"], w.meta["chunk"]
+    per_rank = 2 * (k - 1) * chunk
+    assert per_rank == w.meta["per_rank_injected"]
+    payload_padded = chunk * k
+    assert per_rank * k == w.n_packets
+    assert per_rank == 2 * (k - 1) / k * payload_padded
+
+    sim = Simulator(default_workload_config(nx, ny), backend=backend)
+    sim.attach({key: v.copy() for key, v in w.program.items()})
+    sim.run_until_drained(50_000)
+    t = sim.telemetry()
+    # every rank's tile ejects exactly its received share (port P)
+    for r in range(k):
+        x, y = w.placement.tile(r)
+        assert int(t.link_util_fwd[y, x, 0]) == per_rank, \
+            f"rank {r} at ({x},{y}) ejected " \
+            f"{int(t.link_util_fwd[y, x, 0])} != {per_rank}"
+    # mesh-channel traversals == sum over ranks of packets x hop length
+    hops = sum(per_rank * w.placement.ring_hop_length(r) for r in range(k))
+    assert int(t.link_util_fwd[..., 1:].sum()) == hops
+
+
+# ----------------------------------------------------- cross-backend parity
+
+@pytest.mark.parametrize("make", [
+    lambda: ring_all_reduce(4, 4, 12),
+    lambda: parameter_broadcast(4, 4, 8),
+    lambda: moe_all_to_all(4, 4, 3, imbalance=0.3, seed=2),
+    lambda: pipeline_p2p(4, 4, n_micro=3, act_words=4, backward=True),
+    lambda: pgas_scatter(4, 4, 3),
+], ids=["allreduce", "broadcast", "moe", "pipeline", "pgas"])
+def test_families_bit_identical_across_backends(make):
+    w = make()
+    r = run_workload(w, backend="both")      # raises on any divergence
+    assert r.backend == "both"
+    assert r.delivered == r.injected == w.n_packets
+    json.dumps(r.to_json())                  # report is JSON-clean
+
+
+def test_merged_workloads_run_and_count():
+    a = ring_all_reduce(4, 4, 8)
+    b = parameter_broadcast(4, 4, 8)
+    m = merge_workloads("ar_then_bcast", [a, b], gap=4)
+    assert m.n_packets == a.n_packets + b.n_packets
+    r = run_workload(m, backend="numpy")
+    assert r.delivered == m.n_packets
+
+
+# ------------------------------------------------------------------- moe
+
+def test_moe_token_accounting():
+    w = moe_all_to_all(4, 4, 5, top_k=2, imbalance=0.5, seed=0)
+    load = w.meta["expert_load"]
+    assert sum(load) == w.n_packets == 16 * 5 * 2
+    assert w.meta["hot_expert_share"] == load[0] / w.n_packets
+    # skew concentrates on expert 0
+    assert load[0] == max(load)
+    with pytest.raises(ValueError):
+        moe_all_to_all(4, 4, 2, imbalance=1.0)
+    with pytest.raises(ValueError):
+        moe_all_to_all(4, 4, 2, rate=0.0)
+
+
+# ------------------------------------------------------------------ pgas
+
+def test_pgas_memory_matches_expected_image():
+    """Simulated end-state memory == the analytic commit image of the
+    same store batch (collision-free addresses)."""
+    T, S = 16, 3
+    rng = np.random.default_rng(3)
+    addr = np.zeros((T, T, S), np.int64)
+    data = np.zeros((T, T, S), np.int64)
+    mask = np.zeros((T, T, S), bool)
+    for t in range(T):
+        for s in range(S):
+            d = (t + s + 1) % T
+            # each destination hears from distinct sources (d is unique
+            # per slot for one t), so addr=t is collision-free per tile
+            addr[t, d, s] = t
+            data[t, d, s] = int(rng.integers(1, 1000))
+            mask[t, d, s] = True
+    w = pgas_from_batches(addr, data, mask, 4, 4, mem_words=32)
+    sim = Simulator(MeshConfig(nx=4, ny=4, mem_words=32), backend="numpy")
+    sim.attach({k: v.copy() for k, v in w.program.items()})
+    sim.run_until_drained(20_000)
+    exp = expected_memory(addr, data, mask, 4, 4, mem_words=32)
+    np.testing.assert_array_equal(np.asarray(sim.mem), exp)
+
+
+def test_pgas_from_batches_validates_addresses():
+    addr = np.full((16, 16, 1), 999)         # beyond mem_words
+    data = np.zeros((16, 16, 1), np.int64)
+    mask = np.ones((16, 16, 1), bool)
+    with pytest.raises(ValueError):
+        pgas_from_batches(addr, data, mask, 4, 4, mem_words=64)
+
+
+# ------------------------------------------------- congestion -> roofline
+
+def _mk_report(family, k, injected, cycles, mesh="4x4"):
+    from repro.workloads import WorkloadReport
+    return WorkloadReport(
+        name=f"{family}_{injected}", family=family, mesh=mesh,
+        backend="numpy", cycles=cycles, n_steps=1,
+        cycles_per_step=float(cycles), injected=injected,
+        delivered=injected, accepted_throughput=0.0, mean_latency=0.0,
+        peak_link_util=0.0, hotspots=[], link_heatmap=[],
+        meta={"k": k})
+
+
+def test_congestion_fit_recovers_affine_law():
+    # cycles = 3 * (injected/k) + 50, exactly
+    reports = [_mk_report("allreduce", 4, inj, 3 * (inj // 4) + 50)
+               for inj in (40, 80, 160)]
+    cm = CongestionModel.fit(reports, clock_hz=1e9)
+    a, b = cm.coeffs["allreduce"]
+    assert a == pytest.approx(3.0) and b == pytest.approx(50.0)
+    # pricing: wire_bytes -> words -> cycles -> seconds
+    assert cm.op_cycles("all-reduce", wire_bytes=400, count=2) == \
+        pytest.approx(3.0 * 100 + 2 * 50.0)
+    cm2 = CongestionModel.from_json(cm.to_json())
+    assert cm2.coeffs == cm.coeffs and cm2.clock_hz == cm.clock_hz
+
+
+def test_congestion_family_fallback():
+    cm = CongestionModel(mesh="4x4", coeffs={"allreduce": (2.0, 0.0)})
+    # uncalibrated families price through the fallback chain
+    assert cm.family_for("all-to-all") == "allreduce"
+    assert cm.op_cycles("collective-permute", 40) == pytest.approx(20.0)
+
+
+def test_roofline_netsim_vs_analytic_pinned():
+    """The acceptance pin: netsim collective time comes from simulated
+    cycles and differs from the analytic estimate on the same colls."""
+    from repro.configs import SHAPES, get_config
+    cfg = get_config("stablelm-3b")
+    shape = SHAPES["train_4k"]
+    cost = {"flops": 1e15, "bytes accessed": 1e12, "bytes adjusted": 5e11}
+    colls = {"all-reduce": {"bytes": 8e8, "count": 2, "wire_bytes": 1.2e9}}
+    cm = CongestionModel(mesh="4x4",
+                         coeffs={"allreduce": (1.0, 10.0)}, clock_hz=1e9)
+
+    a = rl.roofline(cfg, shape, "pod", 256, cost, dict(colls))
+    n = rl.roofline(cfg, shape, "pod", 256, cost, dict(colls),
+                    network="netsim", congestion=cm)
+    assert a.network == "analytic" and n.network == "netsim"
+    assert a.collective_s == pytest.approx(8e8 / rl.HW.ICI_BW)
+    # 1.2e9 bytes / 4 B per word * 1 cycle/word + 2 * 10 cycles @ 1 GHz
+    assert n.collective_s == pytest.approx((1.2e9 / 4 + 20) / 1e9)
+    assert n.collective_s != a.collective_s
+    det = n.coll_detail["all-reduce"]
+    assert det["family"] == "allreduce"
+    assert det["sim_s"] == pytest.approx(n.collective_s)
+    # analytic fields survive next to the simulated ones
+    assert det["wire_bytes"] == 1.2e9
+    with pytest.raises(ValueError):
+        rl.roofline(cfg, shape, "pod", 256, cost, dict(colls),
+                    network="wrong")
+
+
+def test_measure_cell_cost_annotation_helper():
+    from repro.launch.costing import netsim_collectives
+    cm = CongestionModel(mesh="4x4", coeffs={"moe": (2.0, 5.0)})
+    colls = {"all-to-all": {"bytes": 80.0, "count": 1, "wire_bytes": 40.0}}
+    out = netsim_collectives(colls, cm)
+    assert out["all-to-all"]["sim_cycles"] == pytest.approx(
+        2.0 * 10 + 5.0)
+    assert out["all-to-all"]["bytes"] == 80.0
