@@ -10,6 +10,10 @@ A fraction of the full benchmark battery, sized for a CI job:
   ``assert_state_equal`` contract (memory, stats, traces, telemetry, and
   decoded in-flight packets field-for-field) — catches datapath
   *correctness* regressions without waiting for the full test suite;
+* a 4x4 ``impl="pallas"`` parity microbench — the Pallas router-step
+  kernel in interpret mode (CPU CI has no compiled Pallas backend, so
+  this is a correctness gate: same drain cycle, bit-identical telemetry
+  and memory vs the fused step);
 * a workloads smoke: a 4x4 ring all-reduce and one MoE all-to-all from
   the workload traffic compiler, each run on BOTH backends with the
   bit-identical telemetry assert — catches regressions in the
@@ -71,6 +75,39 @@ def parity_grid() -> List[Dict]:
     return out
 
 
+def pallas_parity_smoke() -> List[Dict]:
+    """4x4 ``impl="pallas"`` parity microbench: the Pallas router-step
+    kernel (interpret mode on CPU CI — a correctness gate, not a perf
+    claim) run to the drain fence with a multi-cycle inner loop that does
+    not divide the fence cadence, against the fused step: same drain
+    cycle, bit-identical telemetry and memory."""
+    cfg = MeshConfig(nx=4, ny=4, max_out_credits=4)
+    entries = make_traffic("uniform", 4, 4, 8, rate=0.7, seed=11)
+    t0 = time.perf_counter()
+    # same fence cadence on both sims (a run stops on a fence-block
+    # boundary, so check_every is part of the final-state contract); the
+    # kernel's inner loop deliberately does NOT divide it
+    a = Simulator(cfg, backend="jax", check_every=4)
+    a.attach({k: v.copy() for k, v in entries.items()})
+    b = Simulator(cfg, backend="jax", impl="pallas", cycles_per_call=3,
+                  check_every=4)
+    b.attach(entries)
+    ok, err, ca = True, "", -1
+    try:
+        ca = a.run_until_drained(4000)
+        cb = b.run_until_drained(4000)
+        assert ca == cb, f"drain cycle diverged: fused {ca} != pallas {cb}"
+        a.telemetry().assert_bit_identical(b.telemetry())
+        np.testing.assert_array_equal(np.asarray(a.mem), np.asarray(b.mem))
+    except AssertionError as e:
+        head = str(e).strip().splitlines()
+        ok, err = False, head[0] if head else "?"
+    return [{"name": "pallas_kernel_parity_4x4", "ok": ok,
+             "drain_cycle": ca,
+             "wall_s": round(time.perf_counter() - t0, 2),
+             **({"error": err} if err else {})}]
+
+
 def workloads_smoke() -> List[Dict]:
     """4x4 ring all-reduce + MoE all-to-all, parity-checked on both
     backends (run_workload raises on any telemetry divergence)."""
@@ -98,6 +135,7 @@ def workloads_smoke() -> List[Dict]:
 
 def main() -> int:
     records = parity_grid()
+    records.extend(pallas_parity_smoke())
     records.extend(workloads_smoke())
     micro = bench_step_throughput(shapes=((4, 4),), cycles=800,
                                   oracle_cycles=100)

@@ -33,6 +33,42 @@ SUITES = ("netsim", "netsim_jax", "workloads", "collectives", "kernels",
 _TRAJECTORY_KEYS = ("wall_s", "compile_s", "run_s", "wall_s_incl_compile",
                     "speedup_vs_baseline", "ok")
 
+# step-throughput regression gate: post-compile cycles/s per mesh must
+# stay above this fraction of the frozen bench_baseline.json snapshot
+# (generous enough for shared-runner noise, tight enough to catch a
+# datapath regression, which shows up as an integer-factor slowdown)
+STEP_THROUGHPUT_FLOOR = 0.5
+
+
+def gate_step_throughput(results: Dict[str, List[Dict]],
+                         floor: float = STEP_THROUGHPUT_FLOOR) -> bool:
+    """Compare this run's step-throughput microbench against the frozen
+    ``experiments/bench_baseline.json`` snapshot, mesh by mesh; False (and
+    a [FAIL] line) when any mesh's post-compile cycles/s fell below
+    ``floor`` x baseline.  Vacuously True when either side lacks the
+    record (fresh checkout, suite not selected, or a crashed suite)."""
+    from benchmarks.bench_netsim_jax import load_baseline
+    base = load_baseline().get("step_throughput_microbench", {})
+    recs = [r for r in results.get("netsim_jax", [])
+            if r.get("name") == "step_throughput_microbench"]
+    if not base.get("meshes") or not recs:
+        return True
+    ok = True
+    for mesh, brec in base["meshes"].items():
+        want = brec.get("jax_cycles_per_s")
+        got = recs[0].get("meshes", {}).get(mesh, {}).get("jax_cycles_per_s")
+        if not want or got is None:
+            continue
+        if float(got) < floor * float(want):
+            print(f"[FAIL] step-throughput regression on {mesh}: "
+                  f"{float(got):.1f} cycles/s < {floor} x baseline "
+                  f"{float(want):.1f}", flush=True)
+            ok = False
+    if ok:
+        print(f"[OK ] step-throughput gate: every mesh >= {floor} x "
+              f"baseline cycles/s", flush=True)
+    return ok
+
 
 def trajectory_entry(results: Dict[str, List[Dict]], wall: float) -> Dict:
     """One PR-over-PR record: per-benchmark timing split + suite walls."""
@@ -127,10 +163,11 @@ def main(argv=None) -> int:
         print(f"wrote {out / 'workload_reports.json'}")
     # PR-over-PR timing trajectory (appended, never overwritten)
     print(f"appended {append_trajectory(out, trajectory_entry(results, wall))}")
+    gate_ok = gate_step_throughput(results)
     if crashed:
         print(f"FAILED: suite(s) crashed: {', '.join(crashed)}")
         return 1
-    if n_ok != len(flat):
+    if n_ok != len(flat) or not gate_ok:
         return 1
     return 0
 

@@ -62,7 +62,10 @@ def vmapped_credit_sweep(hops: int = 8, cycles: int = 400) -> None:
     prog = load_program(entries)
     rtt = 2 * hops + 5
     # keep a host-side copy: `simulate` donates its SimState, and the
-    # vmapped states alias the `credits` buffer they were built from
+    # vmapped states alias the `credits` buffer they were built from.
+    # This is the raw functional API — callers snapshot to host
+    # themselves; the `Simulator` facade does it for you
+    # (`Telemetry.of` copies every counter at the boundary).
     credits = np.asarray([1, 2, 4, 8, 16, rtt, 32])
     states = jax.vmap(lambda c: init_state(cfg, max_credits=c))(
         jnp.asarray(credits))

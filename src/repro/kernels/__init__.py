@@ -5,5 +5,6 @@ tiling), with ``ops.py`` providing the jit'd public wrappers (padding,
 interpret-mode fallback on CPU, custom VJPs) and ``ref.py`` the pure-jnp
 oracles the tests sweep against.
 """
+from .backend import has_compiled_backend, resolve_interpret, use_interpret  # noqa: F401
 from .ops import flash_attention_op, grouped_matmul, ssd_scan_op  # noqa: F401
 from . import ref  # noqa: F401

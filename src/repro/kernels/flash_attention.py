@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .backend import resolve_interpret
+
 _NEG_INF = -1e30
 
 
@@ -86,11 +88,12 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     block_q: int = 512, block_k: int = 512,
                     kv_len: Optional[int] = None,
                     sm_scale: Optional[float] = None,
-                    interpret: bool = False) -> jax.Array:
+                    interpret: Optional[bool] = None) -> jax.Array:
     """q: (B, H, Sq, hd); k/v: (B, K, Sk, hd) with H % K == 0.
 
     Shapes must be pre-padded: Sq % block_q == 0, Sk % block_k == 0 and
     hd % 128 == 0 (ops.py does this).  ``kv_len`` masks the padded KV tail.
+    ``interpret=None`` picks the right mode for the host (kernels.backend).
     """
     b, h, sq, hd = q.shape
     _, kh, sk, _ = k.shape
@@ -121,7 +124,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct((b, h, sq, hd), q.dtype),
         # fp32 online-softmax state; persists across the (innermost) kv dim
         scratch_shapes=_scratch(block_q, hd),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(q, k, v)
 
 

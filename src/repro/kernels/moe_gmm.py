@@ -14,11 +14,14 @@ tokens / unused capacity) multiply zeros.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from .backend import resolve_interpret
 
 
 def _gmm_kernel(lhs_ref, rhs_ref, out_ref, acc_ref):
@@ -41,10 +44,11 @@ def _gmm_kernel(lhs_ref, rhs_ref, out_ref, acc_ref):
 def grouped_matmul_pallas(lhs: jax.Array, rhs: jax.Array, *,
                           block_m: int = 128, block_n: int = 128,
                           block_k: int = 512,
-                          interpret: bool = False) -> jax.Array:
+                          interpret: Optional[bool] = None) -> jax.Array:
     """lhs: (E, M, K); rhs: (E, K, N) -> (E, M, N).
 
-    M/N/K must be multiples of the block sizes (ops.py pads).
+    M/N/K must be multiples of the block sizes (ops.py pads);
+    ``interpret=None`` picks the right mode for the host (kernels.backend).
     """
     e, m, k = lhs.shape
     _, _, n = rhs.shape
@@ -65,5 +69,5 @@ def grouped_matmul_pallas(lhs: jax.Array, rhs: jax.Array, *,
                                lambda e_, im, in_, ik: (e_, im, in_)),
         out_shape=jax.ShapeDtypeStruct((e, m, n), lhs.dtype),
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(lhs, rhs)

@@ -7,7 +7,9 @@ Responsibilities:
   the result.  Zero/masked padding is exact for all three kernels.
 * **Backend dispatch**: on TPU the kernels compile natively; everywhere else
   (this CPU container) they run under ``interpret=True``, which executes the
-  kernel body in Python — bit-for-bit the same program, minus the hardware.
+  kernel body through XLA — bit-for-bit the same program, minus the
+  hardware.  The detection lives in :mod:`repro.kernels.backend` (shared by
+  every kernel module, including the router-step kernel).
 * **Autodiff**: Pallas calls have no automatic VJP.  Each op carries a
   ``jax.custom_vjp`` whose backward pass recomputes through the pure-jnp
   reference (flash/SSD) or through two more grouped matmuls (GMM, exact) —
@@ -22,15 +24,15 @@ import jax
 import jax.numpy as jnp
 
 from . import ref as _ref
+from .backend import use_interpret
 from .flash_attention import flash_attention as _flash_pallas
 from .moe_gmm import grouped_matmul_pallas as _gmm_pallas
 from .ssd_scan import ssd_scan as _ssd_pallas
 
 __all__ = ["flash_attention_op", "ssd_scan_op", "grouped_matmul"]
 
-
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+# deprecated alias — the detection's canonical home is kernels.backend
+_interpret = use_interpret
 
 
 def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:

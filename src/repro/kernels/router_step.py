@@ -1,0 +1,143 @@
+"""The per-cycle mesh router update as a single Pallas kernel.
+
+The netsim transition (:func:`repro.netsim_jax.sim._step_core`) is a
+neighbor-local int32 update over the stacked ``(2, ny, nx, ...)`` FIFO
+lattice — routing off the packed header word, round-robin arbitration,
+the post-arbitration deliver gate, credit return and one merged stacked
+buffer write.  This module runs that whole transition as ONE
+``pl.pallas_call``: every ``SimState`` leaf is resident on-chip for the
+duration of the launch, and a static ``cycles_per_call`` ``fori_loop``
+executes several mesh cycles per launch, amortizing the dispatch the way
+``ssd_scan.py`` chunks its recurrence.
+
+Design notes:
+
+* **Shared trace.** The kernel body calls ``_step_core(kernel_safe=True)``
+  — the very same function the fused XLA path runs, with its four
+  traced-index scatter/gather ops swapped for one-hot select/sum forms
+  (exact in int32).  There is no second implementation of the router to
+  drift; bit-identity is by construction and enforced by
+  ``tests/test_router_kernel.py``.
+* **State in place.** Every state leaf is passed through
+  ``input_output_aliases``, so the launch updates the simulator state
+  buffers in place — the Pallas analogue of the ``donate_argnums`` the
+  jitted drivers already use.
+* **Packing.** Pallas refs want >= 2-D arrays of one dtype: leaves are
+  viewed as int32 (bools widen, exactly) and scalars / 1-D leaves get
+  leading unit axes; the kernel unpacks to the original pytree, steps,
+  and repacks.  The per-cycle ``done``/``drained`` outputs come back as
+  ``(cycles_per_call, 1)`` columns so the drivers keep exact per-cycle
+  completion traces and drain fences across multi-cycle launches.
+* **Fallback.** ``interpret=None`` resolves through
+  :mod:`repro.kernels.backend`: native Mosaic on TPU, interpret mode
+  (same traced program through XLA) everywhere else — CI on CPU checks
+  correctness, not speed.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.netsim_jax import sim as _sim
+from .backend import resolve_interpret
+
+__all__ = ["router_step_call"]
+
+I32 = jnp.int32
+
+
+def _packed_shape(shape: Tuple[int, ...]) -> Tuple[int, ...]:
+    """Pallas refs want >= 2 dims: scalars become (1, 1), 1-D (1, n)."""
+    return ((1,) * (2 - len(shape)) + tuple(shape)) if len(shape) < 2 \
+        else tuple(shape)
+
+
+def _pack(leaf: jax.Array) -> jax.Array:
+    return jnp.asarray(leaf, I32).reshape(_packed_shape(leaf.shape))
+
+
+def _unpack(val: jax.Array, meta) -> jax.Array:
+    shape, dtype = meta
+    val = val.reshape(shape)
+    return (val != 0) if np.issubdtype(dtype, np.bool_) else val
+
+
+def _router_kernel(cfg, st_def, st_metas, prog_def, prog_metas,
+                   cycles_per_call: int, *refs):
+    n_st, n_prog = len(st_metas), len(prog_metas)
+    st_in = refs[:n_st]
+    prog_in = refs[n_st:n_st + n_prog]
+    st_out = refs[n_st + n_prog:n_st + n_prog + n_st]
+    done_ref, drained_ref = refs[-2], refs[-1]
+
+    st = jax.tree_util.tree_unflatten(
+        st_def, [_unpack(r[...], m) for r, m in zip(st_in, st_metas)])
+    prog = jax.tree_util.tree_unflatten(
+        prog_def, [_unpack(r[...], m) for r, m in zip(prog_in, prog_metas)])
+
+    C = cycles_per_call
+    # 2-D iota (1-D iotas do not lower on Mosaic): row j of the (C, 1)
+    # output columns belongs to inner cycle j
+    row = jax.lax.broadcasted_iota(I32, (C, 1), 0)
+
+    def body(j, carry):
+        st, done, drained_v = carry
+        st2, done_now = _sim._step_core(cfg, prog, st, kernel_safe=True)
+        hit = row == j
+        done = jnp.where(hit, done_now, done)
+        drained_v = jnp.where(hit, _sim.drained(st2, prog).astype(I32),
+                              drained_v)
+        return st2, done, drained_v
+
+    st, done, drained_v = jax.lax.fori_loop(
+        0, C, body, (st, jnp.zeros((C, 1), I32), jnp.zeros((C, 1), I32)))
+
+    for ref, leaf in zip(st_out, jax.tree_util.tree_leaves(st)):
+        ref[...] = _pack(leaf)
+    done_ref[...] = done
+    drained_ref[...] = drained_v
+
+
+def router_step_call(cfg, prog, st, cycles_per_call: int, *,
+                     interpret: Optional[bool] = None):
+    """Run ``cycles_per_call`` mesh cycles in one Pallas kernel launch.
+
+    Returns ``(state', done, drained)``: ``done[j]`` is the completion
+    count of inner cycle j and ``drained[j]`` the global drain fence
+    *after* that cycle (int32 0/1), both shaped ``(cycles_per_call,)`` —
+    exactly what ``cycles_per_call`` launches of the fused step would
+    have produced.  ``interpret=None`` picks the right mode for the host
+    (:mod:`repro.kernels.backend`).
+    """
+    C = int(cycles_per_call)
+    if C < 1:
+        raise ValueError(f"cycles_per_call must be >= 1, got {C}")
+    st_leaves, st_def = jax.tree_util.tree_flatten(st)
+    prog_leaves, prog_def = jax.tree_util.tree_flatten(prog)
+    st_metas = tuple((tuple(l.shape), l.dtype) for l in st_leaves)
+    prog_metas = tuple((tuple(l.shape), l.dtype) for l in prog_leaves)
+    packed_st = [_pack(l) for l in st_leaves]
+    packed_prog = [_pack(l) for l in prog_leaves]
+
+    kernel = functools.partial(_router_kernel, cfg, st_def, st_metas,
+                               prog_def, prog_metas, C)
+    outs = pl.pallas_call(
+        kernel,
+        out_shape=([jax.ShapeDtypeStruct(p.shape, I32) for p in packed_st]
+                   + [jax.ShapeDtypeStruct((C, 1), I32),
+                      jax.ShapeDtypeStruct((C, 1), I32)]),
+        # state updates in place: input i aliases output i (the kernel
+        # reads every input once up front and writes outputs once at the
+        # end, so the aliasing is hazard-free)
+        input_output_aliases={i: i for i in range(len(packed_st))},
+        interpret=resolve_interpret(interpret),
+    )(*packed_st, *packed_prog)
+
+    new_st = jax.tree_util.tree_unflatten(
+        st_def, [_unpack(o, m) for o, m in zip(outs, st_metas)])
+    return new_st, outs[-2][:, 0], outs[-1][:, 0]

@@ -23,11 +23,14 @@ Q=256, P=64, N=128 the working set is ~0.5 MB fp32.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from .backend import resolve_interpret
 
 
 def _ssd_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, y_ref, state_ref, *,
@@ -79,7 +82,7 @@ def _ssd_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, y_ref, state_ref, *,
 
 def ssd_scan(x: jax.Array, dt: jax.Array, B: jax.Array, C: jax.Array,
              A: jax.Array, *, chunk: int = 256,
-             interpret: bool = False) -> jax.Array:
+             interpret: Optional[bool] = None) -> jax.Array:
     """SSD over a full sequence.
 
     x:  (batch, heads, S, P)   — per-head inputs (dt NOT yet applied)
@@ -88,7 +91,8 @@ def ssd_scan(x: jax.Array, dt: jax.Array, B: jax.Array, C: jax.Array,
     C:  (batch, groups, S, N)  — output projections
     A:  (heads,)               — negative per-head decay rates
     Returns y: (batch, heads, S, P).  S must be a multiple of ``chunk``
-    (ops.py pads).
+    (ops.py pads).  ``interpret=None`` picks the right mode for the host
+    (kernels.backend).
     """
     b, h, s, p = x.shape
     _, g, _, n = B.shape
@@ -115,5 +119,5 @@ def ssd_scan(x: jax.Array, dt: jax.Array, B: jax.Array, C: jax.Array,
                                lambda b_, h_, c_: (b_, h_, c_, 0)),
         out_shape=jax.ShapeDtypeStruct((b, h, s, p), x.dtype),
         scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],  # carried state
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(x, dt, B, C, a2)

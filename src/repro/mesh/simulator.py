@@ -63,7 +63,8 @@ class Simulator:
     def __init__(self, cfg, *, backend: str = "numpy", seed: int = 0,
                  fifo_depth: Optional[int] = None,
                  max_credits: Optional[int] = None,
-                 unroll: int = 1, check_every: int = 1):
+                 unroll: int = 1, check_every: int = 1,
+                 impl: str = "fused", cycles_per_call: int = 1):
         """``cfg`` may be a MeshConfig, NetConfig or SimConfig.
 
         ``fifo_depth`` / ``max_credits`` set the *effective* router-FIFO
@@ -72,9 +73,11 @@ class Simulator:
         recompiling); the numpy oracle folds them into its config, which
         is dynamics-identical.
 
-        ``unroll`` / ``check_every`` are JAX-backend jit tuning knobs
-        (scan-unroll factor of ``run``; drain-fence check cadence of
-        ``run_until_drained`` — see :func:`repro.netsim_jax.simulate` /
+        ``unroll`` / ``check_every`` / ``impl`` / ``cycles_per_call`` are
+        JAX-backend jit tuning knobs (scan-unroll factor of ``run``;
+        drain-fence check cadence of ``run_until_drained``; the
+        fused-XLA vs Pallas-kernel cycle step and the kernel's
+        cycles-per-launch — see :func:`repro.netsim_jax.simulate` /
         :func:`repro.netsim_jax.run_until_drained`).  They affect speed
         only, never results; the numpy oracle ignores them.
         """
@@ -85,6 +88,12 @@ class Simulator:
             raise ValueError(
                 f"unroll and check_every must be >= 1, got unroll={unroll}, "
                 f"check_every={check_every}")
+        if impl not in ("fused", "pallas"):
+            raise ValueError(
+                f"unknown step impl {impl!r}: expected 'fused' or 'pallas'")
+        if cycles_per_call < 1:
+            raise ValueError(
+                f"cycles_per_call must be >= 1, got {cycles_per_call}")
         self.cfg = MeshConfig.coerce(cfg)
         self.backend = backend
         self._seed = seed
@@ -92,6 +101,8 @@ class Simulator:
         self._max_credits = max_credits
         self._unroll = int(unroll)
         self._check_every = int(check_every)
+        self._impl = impl
+        self._cycles_per_call = int(cycles_per_call)
         self._endpoints: Dict[Tuple[int, int], Endpoint] = {}  # (y, x) -> ep
         self._trace: List[Tuple[int, int, int, Request]] = []
         self._program: Optional[Dict[str, np.ndarray]] = None
@@ -120,7 +131,9 @@ class Simulator:
         return JaxMeshSim(self.cfg.to_sim(), fifo_depth=self._fifo_depth,
                           max_credits=self._max_credits,
                           unroll=self._unroll,
-                          check_every=self._check_every)
+                          check_every=self._check_every,
+                          impl=self._impl,
+                          cycles_per_call=self._cycles_per_call)
 
     def _bridge(self) -> "Simulator":
         """The internal oracle that natively executes reactive endpoints

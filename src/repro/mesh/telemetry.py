@@ -96,9 +96,19 @@ class Telemetry:
     @classmethod
     def of(cls, sim) -> "Telemetry":
         """Build from anything oracle-shaped (``MeshSim``, ``JaxMeshSim``
-        or the :class:`repro.mesh.Simulator` facade)."""
+        or the :class:`repro.mesh.Simulator` facade).
+
+        Every array is **copied** (``np.array(copy=True)``, not
+        ``asarray``): the sources are live simulator counters — the numpy
+        oracle's int64 accumulators, or JAX buffers that the donating
+        jitted drivers (``donate_argnums`` / the Pallas kernel's
+        ``input_output_aliases``) may overwrite in place on the next
+        ``run``.  ``asarray`` into the same dtype is a zero-copy view of
+        exactly those buffers, so a snapshot taken at the facade boundary
+        would silently mutate later; an explicit copy makes the record a
+        true point-in-time snapshot."""
         return cls(cycles=int(sim.cycle),
-                   **{f: np.asarray(getattr(sim, f), dtype=np.int64)
+                   **{f: np.array(getattr(sim, f), dtype=np.int64, copy=True)
                       for f in TELEMETRY_ARRAY_FIELDS})
 
     def assert_bit_identical(self, other: "Telemetry") -> None:

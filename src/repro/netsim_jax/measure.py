@@ -104,28 +104,30 @@ def hist_quantile(hist: jax.Array, q: float) -> jax.Array:
     return jnp.where(total > 0, jnp.minimum(idx, LAT_BINS - 1), 0).astype(F32)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 3, 4, 5, 6))
+@functools.partial(jax.jit, static_argnums=(0, 3, 4, 5, 6, 7, 8))
 def phased_stats(cfg: SimConfig, prog: Program, state: SimState,
                  warmup: int, measure: int, drain: int,
-                 unroll: int = 1) -> PhaseStats:
+                 unroll: int = 1, impl: str = "fused",
+                 cycles_per_call: int = 1) -> PhaseStats:
     """Run warmup -> measurement window -> drain and reduce the telemetry
     into :class:`PhaseStats`.  ``state`` should be fresh (its histogram
     empty); the measurement window is cycles [warmup, warmup + measure).
-    ``unroll`` is the scan-unroll factor of the underlying
-    :func:`repro.netsim_jax.simulate` phases (a speed knob — it never
-    changes results).  No buffer donation here: the reduced stats are
-    tiny, so the state has no output to alias with."""
+    ``unroll`` / ``impl`` / ``cycles_per_call`` select how the underlying
+    :func:`repro.netsim_jax.simulate` phases execute (scan unroll; fused
+    XLA step vs the Pallas router kernel and its cycles-per-launch) —
+    speed knobs that never change results.  No buffer donation here: the
+    reduced stats are tiny, so the state has no output to alias with."""
     ntiles = cfg.nx * cfg.ny
     st = state._replace(
         measure_start=state.cycle + warmup,
         measure_stop=state.cycle + warmup + measure)
-    st, _ = simulate(cfg, prog, st, warmup, unroll)
+    st, _ = simulate(cfg, prog, st, warmup, unroll, impl, cycles_per_call)
     inj0, comp0 = st.prog_ptr.sum(), st.completed.sum()
     util0 = st.link_util[FWD]
-    st, _ = simulate(cfg, prog, st, measure, unroll)
+    st, _ = simulate(cfg, prog, st, measure, unroll, impl, cycles_per_call)
     inj1, comp1 = st.prog_ptr.sum(), st.completed.sum()
     util1 = st.link_util[FWD]
-    st, _ = simulate(cfg, prog, st, drain, unroll)
+    st, _ = simulate(cfg, prog, st, drain, unroll, impl, cycles_per_call)
 
     hist = st.lat_hist
     total = hist.sum()
@@ -149,13 +151,16 @@ def phased_stats(cfg: SimConfig, prog: Program, state: SimState,
 
 def measure_program(cfg, entries: Dict[str, np.ndarray], *,
                     warmup: int = 200, measure: int = 400,
-                    drain: int = 400, unroll: int = 1) -> Dict[str, float]:
+                    drain: int = 400, unroll: int = 1,
+                    impl: str = "fused",
+                    cycles_per_call: int = 1) -> Dict[str, float]:
     """Convenience: phased measurement of one injection program; returns
     plain-python stats (``hist`` as a numpy array).  ``cfg`` may be a
     MeshConfig, NetConfig or SimConfig."""
     cfg = _as_simconfig(cfg)
     stats = phased_stats(cfg, load_program(entries), init_state(cfg),
-                         warmup, measure, drain, unroll)
+                         warmup, measure, drain, unroll, impl,
+                         cycles_per_call)
     out = {k: float(v) for k, v in stats._asdict().items() if k != "hist"}
     out["hist"] = np.asarray(stats.hist)
     return out
@@ -248,14 +253,15 @@ def curve_record(out: Dict[str, object]) -> Dict[str, object]:
 
 @functools.lru_cache(maxsize=None)
 def _sweep_jit(cfg: SimConfig, warmup: int, measure: int, drain: int,
-               unroll: int):
+               unroll: int, impl: str = "fused", cycles_per_call: int = 1):
     """The jitted, rate-vmapped phased-measurement program, cached per
-    (config, phase lengths, unroll) so every traffic pattern of a sweep
-    suite shares ONE compilation instead of re-tracing per call."""
+    (config, phase lengths, execution knobs) so every traffic pattern of
+    a sweep suite shares ONE compilation instead of re-tracing per call."""
     def f(progs: Program) -> PhaseStats:
         return jax.vmap(
             lambda p: phased_stats(cfg, p, init_state(cfg), warmup, measure,
-                                   drain, unroll))(progs)
+                                   drain, unroll, impl,
+                                   cycles_per_call))(progs)
     return jax.jit(f)
 
 
@@ -264,14 +270,15 @@ class CompiledSweep(NamedTuple):
     built for (the shapes alone cannot detect a warmup/measure/drain
     permutation with the same total horizon, so the key is checked)."""
     executable: object
-    key: tuple        # (cfg, warmup, measure, drain, unroll)
+    key: tuple   # (cfg, warmup, measure, drain, unroll, impl, cycles_per_call)
 
     def __call__(self, progs: Program) -> "PhaseStats":
         return self.executable(progs)
 
 
 def compile_sweep(cfg, progs: Program, *, warmup: int = 200,
-                  measure: int = 400, drain: int = 400, unroll: int = 1):
+                  measure: int = 400, drain: int = 400, unroll: int = 1,
+                  impl: str = "fused", cycles_per_call: int = 1):
     """AOT-compile the vmapped sweep program for ``progs``-shaped input
     via ``jitted.lower(...).compile()``; returns
     ``(CompiledSweep, compile_seconds)``.  Pass the executable to
@@ -280,10 +287,12 @@ def compile_sweep(cfg, progs: Program, *, warmup: int = 200,
     compile and run time separately."""
     import time
     cfg = _as_simconfig(cfg)
-    fn = _sweep_jit(cfg, warmup, measure, drain, unroll)
+    fn = _sweep_jit(cfg, warmup, measure, drain, unroll, impl,
+                    cycles_per_call)
     t0 = time.perf_counter()
     compiled = fn.lower(progs).compile()
-    return CompiledSweep(compiled, (cfg, warmup, measure, drain, unroll)), \
+    return CompiledSweep(compiled, (cfg, warmup, measure, drain, unroll,
+                                    impl, cycles_per_call)), \
         time.perf_counter() - t0
 
 
@@ -291,28 +300,33 @@ def load_latency_sweep(pattern: str, nx: int, ny: int,
                        rates: Sequence[float], *,
                        warmup: int = 200, measure: int = 400,
                        drain: int = 400, cfg=None, unroll: int = 1,
+                       impl: str = "fused", cycles_per_call: int = 1,
                        compiled=None, **traffic_kw) -> Dict[str, object]:
     """Full load–latency saturation curve for one traffic pattern: the
     phased measurement ``vmap``-ed over offered loads in a single XLA
     program.  Returns numpy arrays keyed like :class:`PhaseStats`, plus
     the rate grid, zero-load latency, and the located saturation point.
     ``cfg`` may be a MeshConfig, NetConfig or SimConfig; ``compiled`` an
-    executable from :func:`compile_sweep` (same config/phases/shapes)."""
+    executable from :func:`compile_sweep` (same config/phases/shapes);
+    ``impl``/``cycles_per_call`` select the Pallas router kernel as in
+    :func:`repro.netsim_jax.simulate` (results identical)."""
     rates = sorted(float(r) for r in rates)
     cfg = SimConfig(nx=nx, ny=ny) if cfg is None else _as_simconfig(cfg)
     horizon = warmup + measure + drain
     progs = stack_rate_programs(pattern, nx, ny, rates, horizon, **traffic_kw)
     if compiled is None:
-        run = _sweep_jit(cfg, warmup, measure, drain, unroll)
+        run = _sweep_jit(cfg, warmup, measure, drain, unroll, impl,
+                         cycles_per_call)
     else:
         key = getattr(compiled, "key", None)
-        want = (cfg, warmup, measure, drain, unroll)
+        want = (cfg, warmup, measure, drain, unroll, impl, cycles_per_call)
         if key is not None and key != want:
             raise ValueError(
                 f"compiled sweep was built for (cfg, warmup, measure, "
-                f"drain, unroll) = {key}, but load_latency_sweep was "
-                f"called with {want}; matching shapes would execute "
-                "silently with the wrong measurement windows")
+                f"drain, unroll, impl, cycles_per_call) = {key}, but "
+                f"load_latency_sweep was called with {want}; matching "
+                "shapes would execute silently with the wrong "
+                "measurement windows")
         run = compiled
     stats = run(progs)
     out: Dict[str, object] = {k: np.asarray(v)

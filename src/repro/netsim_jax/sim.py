@@ -37,7 +37,14 @@ program:
   the global drain fence every K cycles instead of every cycle (the
   reported drain cycle stays exact; with K > 1 the *state* may run up to
   K - 1 cycles past the fence, which only advances ``SimState.cycle`` —
-  a drained network is quiescent).
+  a drained network is quiescent);
+* the whole per-cycle transition can alternatively run as ONE hand-tiled
+  Pallas kernel (``impl="pallas"``, :mod:`repro.kernels.router_step`)
+  with a static ``cycles_per_call`` inner loop, so several mesh cycles
+  execute per kernel launch — same trace, same bits, amortized dispatch.
+  On hosts without a compiled Pallas backend the kernel runs in
+  interpret mode automatically (:mod:`repro.kernels.backend`), keeping
+  results identical everywhere.
 
 The numpy :class:`~repro.core.netsim.MeshSim` remains the oracle: the JAX
 path is validated cycle-for-cycle against it in
@@ -271,6 +278,19 @@ def empty_program_for(cfg: SimConfig) -> Program:
     return _empty_program_for(cfg)
 
 
+def _iota_last(prefix_shape: Tuple[int, ...], n: int,
+               kernel_safe: bool = False) -> jax.Array:
+    """``0..n-1`` along a new trailing axis (for one-hot comparisons
+    against ``x[..., None]``).  Normally a host ``np.arange`` constant
+    (XLA hoists it); inside the Pallas router kernel a full-rank
+    ``broadcasted_iota`` op instead — ``pallas_call`` rejects captured
+    array constants, and 1-D iotas do not lower on Mosaic."""
+    if kernel_safe:
+        return lax.broadcasted_iota(I32, tuple(prefix_shape) + (n,),
+                                    len(prefix_shape))
+    return np.arange(n, dtype=np.int32)
+
+
 # ----------------------------------------------------------------------
 # FIFO primitives (pure)
 # ----------------------------------------------------------------------
@@ -293,14 +313,15 @@ def _fifo_pop(f: Fifo, mask: jax.Array, depth: jax.Array) -> Fifo:
 
 
 def _fifo_push(f: Fifo, mask: jax.Array, pkt: jax.Array,
-               depth: jax.Array) -> Fifo:
+               depth: jax.Array, kernel_safe: bool = False) -> Fifo:
     """Enqueue ``pkt`` (buf shape minus capacity) where ``mask``; caller
     guarantees space.  A one-hot masked select over the (small) depth
     axis — fuses to a single elementwise pass on CPU, where XLA scatters
     are far slower."""
     cap = f.buf.shape[-1]
     tail = (f.head + f.count) % depth
-    onehot = (jnp.arange(cap, dtype=I32) == tail[..., None]) & mask[..., None]
+    onehot = (_iota_last(tail.shape, cap, kernel_safe) == tail[..., None]) \
+        & mask[..., None]
     buf = jnp.where(onehot[None], pkt[..., None], f.buf)
     return f._replace(buf=buf, count=f.count + mask.astype(I32))
 
@@ -308,8 +329,9 @@ def _fifo_push(f: Fifo, mask: jax.Array, pkt: jax.Array,
 # ----------------------------------------------------------------------
 # router — one fused pass over the stacked (fwd, rev) network axis
 # ----------------------------------------------------------------------
-def _arbitrate_fused(net: Fifo, rr: jax.Array, xs: np.ndarray, ys: np.ndarray,
-                     depth: jax.Array) -> Tuple[jax.Array, jax.Array]:
+def _arbitrate_fused(net: Fifo, rr: jax.Array, xs, ys,
+                     depth: jax.Array, kernel_safe: bool = False,
+                     ) -> Tuple[jax.Array, jax.Array]:
     """Routing + round-robin arbitration for BOTH networks in one traced
     pass (mirrors the first half of ``MeshSim._router_step``, stacked).
 
@@ -350,15 +372,25 @@ def _arbitrate_fused(net: Fifo, rr: jax.Array, xs: np.ndarray, ys: np.ndarray,
     # Round-robin arbitration, all five output ports of both networks at
     # once: per output port o, the valid requester with minimal
     # (in_port - rr[o]) mod 5 wins.
-    io = jnp.arange(NUM_DIRS, dtype=I32)
+    if kernel_safe:
+        io_out = lax.broadcasted_iota(I32, (1, 1, 1, 1, NUM_DIRS), 4)
+        io_in = lax.broadcasted_iota(I32, (NUM_DIRS, 1), 0)
+    else:
+        io = np.arange(NUM_DIRS, dtype=np.int32)
+        io_out, io_in = io[None, None, None, None, :], io[:, None]
     cand = (valid[..., :, None]                 # (2, ny, nx, in, out)
-            & (want[..., :, None] == io[None, None, None, None, :])
+            & (want[..., :, None] == io_out)
             & out_space[..., None, :])
-    prio = (io[:, None] - rr[..., None, :]) % NUM_DIRS
+    prio = (io_in - rr[..., None, :]) % NUM_DIRS
     prio = jnp.where(cand, prio, NUM_DIRS + 1)
     best = prio.min(-2)                         # (2, ny, nx, out)
-    win = jnp.where(best <= NUM_DIRS,
-                    jnp.argmin(prio, axis=-2).astype(I32), -1)
+    # first input port attaining the minimum — argmin with its lowest-index
+    # tie-break, written as a select chain over the static port axis so the
+    # identical trace runs inside the Pallas router kernel
+    winner = jnp.zeros(best.shape, I32)
+    for i in range(NUM_DIRS - 1, -1, -1):
+        winner = jnp.where(prio[..., i, :] == best, i, winner)
+    win = jnp.where(best <= NUM_DIRS, winner, -1)
     # winning packet per output port: select along the *input* axis
     # (fusible select chain instead of a gather; see _fifo_peek).  The
     # P column is computed from the UNGATED winner — harmless, because
@@ -372,6 +404,7 @@ def _arbitrate_fused(net: Fifo, rr: jax.Array, xs: np.ndarray, ys: np.ndarray,
 
 
 def _finalize(win: jax.Array, rr: jax.Array, deliver_space: jax.Array,
+              kernel_safe: bool = False,
               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Apply one network's port-P deliver gate to its slice of the fused
     arbitration result; returns (rr', pop_mask (ny,nx,in), has (ny,nx,out))
@@ -381,8 +414,9 @@ def _finalize(win: jax.Array, rr: jax.Array, deliver_space: jax.Array,
     has = win >= 0
     rr = jnp.where(has, (win + 1) % NUM_DIRS, rr)
     widx = jnp.clip(win, 0, NUM_DIRS - 1)
-    io = jnp.arange(NUM_DIRS, dtype=I32)
-    pop = ((io[:, None] == widx[..., None, :]) & has[..., None, :]).any(-1)
+    io_in = lax.broadcasted_iota(I32, (NUM_DIRS, 1), 0) if kernel_safe \
+        else np.arange(NUM_DIRS, dtype=np.int32)[:, None]
+    pop = ((io_in == widx[..., None, :]) & has[..., None, :]).any(-1)
     return rr, pop, has
 
 
@@ -419,16 +453,20 @@ def _neighbor_push_masks(has: jax.Array, moved_pkt: jax.Array,
 # ----------------------------------------------------------------------
 # the per-cycle transition
 # ----------------------------------------------------------------------
-def _coords(cfg: SimConfig) -> Tuple[np.ndarray, np.ndarray]:
+def _coords(cfg: SimConfig, kernel_safe: bool = False):
     # host-side numpy constants (NOT jax arrays: a cached jax array created
     # inside one trace would leak into the next); XLA hoists them out of
-    # the scan loop
+    # the scan loop.  In the Pallas kernel they become 2-D iota ops
+    # instead (captured array constants do not lower).
+    if kernel_safe:
+        return (lax.broadcasted_iota(I32, (cfg.ny, cfg.nx), 1),
+                lax.broadcasted_iota(I32, (cfg.ny, cfg.nx), 0))
     ys, xs = np.mgrid[0:cfg.ny, 0:cfg.nx]
     return xs.astype(np.int32), ys.astype(np.int32)
 
 
-def step(cfg: SimConfig, prog: Program, st: SimState,
-         ) -> Tuple[SimState, jax.Array]:
+def _step_core(cfg: SimConfig, prog: Program, st: SimState, *,
+               kernel_safe: bool = False) -> Tuple[SimState, jax.Array]:
     """One simulator cycle; returns (state', completions_this_cycle).
 
     The sub-step order matches ``MeshSim.step`` exactly — do not reorder.
@@ -437,9 +475,18 @@ def step(cfg: SimConfig, prog: Program, st: SimState,
     port-P count), but the two (large) buffer writes are deferred and
     performed as ONE stacked write at the end — legal because nothing in
     between reads the router buffers, only the counts.
+
+    ``kernel_safe=True`` is the variant traced inside the Pallas router
+    kernel (:mod:`repro.kernels.router_step`): the four traced-index
+    scatter/gather ops (the latency-histogram ``.at[].add``, the memory
+    read, the program-entry fetch and the ``resp_latency > 1`` slot
+    rotation) are swapped for one-hot select/sum forms — pure int32
+    arithmetic, so any summation order is exact and the two variants are
+    bit-identical.  The default keeps XLA's native scatter/gather, which
+    is faster outside the kernel.
     """
     ny, nx = cfg.ny, cfg.nx
-    xs, ys = _coords(cfg)
+    xs, ys = _coords(cfg, kernel_safe)
     c = st.cycle
 
     # ---- registered response port becomes visible (stats record) ----
@@ -452,15 +499,21 @@ def step(cfg: SimConfig, prog: Program, st: SimState,
     # latency histogram, gated to the measurement window by the packet's
     # injection cycle (its tag); scatter-add of 0 elsewhere is a no-op
     in_win = rv & (tag >= st.measure_start) & (tag < st.measure_stop)
-    lat_hist = st.lat_hist.at[jnp.clip(lat, 0, LAT_BINS - 1)].add(
-        in_win.astype(I32))
+    bin_idx = jnp.clip(lat, 0, LAT_BINS - 1)
+    if kernel_safe:
+        bin_oh = (_iota_last(bin_idx.shape, LAT_BINS, True)
+                  == bin_idx[..., None]) & in_win[..., None]
+        lat_hist = st.lat_hist + bin_oh.astype(I32).sum((0, 1))
+    else:
+        lat_hist = st.lat_hist.at[bin_idx].add(in_win.astype(I32))
 
     # ---- both networks: ONE fused routing + arbitration pass ----
-    win2, moved2 = _arbitrate_fused(st.net, st.rr, xs, ys, st.fifo_depth)
+    win2, moved2 = _arbitrate_fused(st.net, st.rr, xs, ys, st.fifo_depth,
+                                    kernel_safe)
 
     # ---- reverse network: P deliveries are ALWAYS absorbed ----
     rr_rev, rpop, rhas = _finalize(win2[REV], st.rr[REV],
-                                   jnp.ones((ny, nx), bool))
+                                   jnp.ones((ny, nx), bool), kernel_safe)
     rmoved = moved2[:, REV]
     rev_head = (st.net.head[REV] + rpop.astype(I32)) % st.fifo_depth
     rev_count = st.net.count[REV] - rpop.astype(I32)
@@ -476,17 +529,28 @@ def step(cfg: SimConfig, prog: Program, st: SimState,
     L = cfg.resp_latency
     if L == 1:                    # static fast path: slot is always 0
         slot = jnp.asarray(0, I32)
+        slot_oh = None
         inj = st.resp_valid[0]                              # (ny, nx)
         inj_pkt = st.resp_buf[:, 0]                         # (F, ny, nx)
     else:
         slot = (c % L).astype(I32)
-        inj = jnp.take(st.resp_valid, slot, axis=0)
-        inj_pkt = jnp.take(st.resp_buf, slot, axis=1)
+        if kernel_safe:
+            # one-hot over the (static, small) slot axis instead of a
+            # traced-index take: exact select, identical bits
+            slot_oh = lax.broadcasted_iota(I32, (L, 1, 1), 0) == slot
+            inj = (st.resp_valid & slot_oh).any(0)
+            inj_pkt = jnp.where(slot_oh[None], st.resp_buf, 0).sum(1)
+        else:
+            slot_oh = None
+            inj = jnp.take(st.resp_valid, slot, axis=0)
+            inj_pkt = jnp.take(st.resp_buf, slot, axis=1)
     rmask_in, rpkt_in = _neighbor_push_masks(rhas, rmoved, inj, inj_pkt)
     rev_tail = (rev_head + rev_count) % st.fifo_depth
     rev_count = rev_count + rmask_in.astype(I32)
     if L == 1:
         resp_valid = jnp.zeros_like(st.resp_valid)
+    elif kernel_safe:
+        resp_valid = st.resp_valid & ~slot_oh
     else:
         resp_valid = st.resp_valid.at[slot].set(False)
     resp_buf = st.resp_buf
@@ -499,8 +563,13 @@ def step(cfg: SimConfig, prog: Program, st: SimState,
     req_hdr = req[_FI["hdr"]]
     req_op = (req_hdr >> OP_SHIFT) & OP_MASK
     addr = jnp.clip(req[_FI["addr"]], 0, cfg.mem_words - 1)
-    addr_oh = jnp.arange(cfg.mem_words, dtype=I32) == addr[..., None]
-    cur = jnp.take_along_axis(st.mem, addr[..., None], axis=-1)[..., 0]
+    addr_oh = _iota_last(addr.shape, cfg.mem_words, kernel_safe) \
+        == addr[..., None]
+    if kernel_safe:
+        # one-hot read reusing the write mask (exact: int32, one hot bit)
+        cur = jnp.where(addr_oh, st.mem, 0).sum(-1)
+    else:
+        cur = jnp.take_along_axis(st.mem, addr[..., None], axis=-1)[..., 0]
     is_store = can & (req_op == OP_STORE)
     is_load = can & (req_op == OP_LOAD)
     is_cas = can & (req_op == OP_CAS)
@@ -518,6 +587,12 @@ def step(cfg: SimConfig, prog: Program, st: SimState,
     if L == 1:                    # resp_valid[0] was just cleared above
         resp_valid = can[None]
         resp_buf = jnp.where(can[None, None], resp[:, None], resp_buf)
+    elif kernel_safe:
+        # refill the just-cleared slot (so `where(can, True, False)` is
+        # simply `can`) and overwrite its packet lanes where `can`
+        resp_valid = jnp.where(slot_oh, can[None], resp_valid)
+        resp_buf = jnp.where(slot_oh[None] & can[None, None],
+                             resp[:, None], resp_buf)
     else:
         wslot = slot              # c % L: inject and refill the same slot
         resp_valid = resp_valid.at[wslot].set(
@@ -527,13 +602,14 @@ def step(cfg: SimConfig, prog: Program, st: SimState,
 
     # ---- forward network: P deliveries go to endpoint FIFO ----
     rr_fwd, fpop, fhas = _finalize(win2[FWD], st.rr[FWD],
-                                   ep_in.count[..., 0] < cfg.ep_fifo)
+                                   ep_in.count[..., 0] < cfg.ep_fifo,
+                                   kernel_safe)
     fmoved = moved2[:, FWD]
     fwd_head = (st.net.head[FWD] + fpop.astype(I32)) % st.fifo_depth
     fwd_count = st.net.count[FWD] - fpop.astype(I32)
     got, fpkt = fhas[..., P], fmoved[..., P]
     ep_in = _fifo_push(ep_in, got[..., None], fpkt[..., None],
-                       jnp.asarray(cfg.ep_fifo, I32))
+                       jnp.asarray(cfg.ep_fifo, I32), kernel_safe)
 
     # ---- master injection from the per-tile program -----------------
     # The injection enqueue targets port P of the post-pop forward FIFOs
@@ -545,10 +621,14 @@ def step(cfg: SimConfig, prog: Program, st: SimState,
     can_inj = pending & (credits > 0)
     Lp = prog.buf.shape[-1]
     pidx = jnp.clip(st.prog_ptr, 0, max(Lp - 1, 0))
-    entry = jnp.take_along_axis(
-        prog.buf, jnp.broadcast_to(pidx[None, ..., None],
-                                   (len(PROG_FIELDS), ny, nx, 1)),
-        axis=-1)[..., 0]                                    # (|PROG|, ny, nx)
+    if kernel_safe:
+        lp_oh = _iota_last(pidx.shape, Lp, True) == pidx[..., None]
+        entry = jnp.where(lp_oh[None], prog.buf, 0).sum(-1)  # (|PROG|, ny, nx)
+    else:
+        entry = jnp.take_along_axis(
+            prog.buf, jnp.broadcast_to(pidx[None, ..., None],
+                                       (len(PROG_FIELDS), ny, nx, 1)),
+            axis=-1)[..., 0]                                # (|PROG|, ny, nx)
     can_inj = can_inj & (entry[_PI["not_before"]] <= c)
     can_inj = can_inj & (fwd_count[..., P] < st.fifo_depth)
     pkt = jnp.stack([
@@ -567,7 +647,8 @@ def step(cfg: SimConfig, prog: Program, st: SimState,
     mask2 = jnp.stack([fmask_in, rmask_in])                 # (2, ny, nx, 5)
     pkt2 = jnp.stack([fpkt_in, rpkt_in], axis=1)            # (F, 2, ny, nx, 5)
     tail2 = jnp.stack([fwd_tail, rev_tail])
-    onehot = (jnp.arange(cap, dtype=I32) == tail2[..., None]) & mask2[..., None]
+    onehot = (_iota_last(tail2.shape, cap, kernel_safe) == tail2[..., None]) \
+        & mask2[..., None]
     net = Fifo(buf=jnp.where(onehot[None], pkt2[..., None], st.net.buf),
                head=jnp.stack([fwd_head, rev_head]),
                count=jnp.stack([fwd_count, rev_count]))
@@ -593,6 +674,35 @@ def step(cfg: SimConfig, prog: Program, st: SimState,
     return st, done_now
 
 
+def _check_impl(impl: str, cycles_per_call: int = 1) -> None:
+    if impl not in ("fused", "pallas"):
+        raise ValueError(
+            f"unknown step impl {impl!r}: expected 'fused' or 'pallas'")
+    if cycles_per_call < 1:
+        raise ValueError(
+            f"cycles_per_call must be >= 1, got {cycles_per_call}")
+
+
+def step(cfg: SimConfig, prog: Program, st: SimState, impl: str = "fused",
+         ) -> Tuple[SimState, jax.Array]:
+    """One simulator cycle; returns (state', completions_this_cycle).
+
+    ``impl`` selects how the transition executes — never what it computes:
+
+    * ``"fused"`` — the stacked single-trace XLA step (:func:`_step_core`);
+    * ``"pallas"`` — the same transition as one Pallas kernel launch
+      (:mod:`repro.kernels.router_step`; interpret mode on hosts without
+      a compiled Pallas backend).  Bit-identical to ``"fused"`` by
+      construction and by test (``tests/test_router_kernel.py``).
+    """
+    _check_impl(impl)
+    if impl == "pallas":
+        from repro.kernels.router_step import router_step_call
+        st2, done, _drained_flags = router_step_call(cfg, prog, st, 1)
+        return st2, done[0]
+    return _step_core(cfg, prog, st)
+
+
 def drained(st: SimState, prog: Program) -> jax.Array:
     """Global-fence condition: programs issued, credits home, nothing in
     the registered response port (same as ``MeshSim.run_until_drained``)."""
@@ -601,23 +711,49 @@ def drained(st: SimState, prog: Program) -> jax.Array:
             & ~st.reg_valid.any())
 
 
-@functools.partial(jax.jit, static_argnums=(0, 3, 4), donate_argnums=(2,))
+@functools.partial(jax.jit, static_argnums=(0, 3, 4, 5, 6),
+                   donate_argnums=(2,))
 def simulate(cfg: SimConfig, prog: Program, state: SimState, cycles: int,
-             unroll: int = 1) -> Tuple[SimState, jax.Array]:
-    """Run ``cycles`` cycles under ``lax.scan``; returns
+             unroll: int = 1, impl: str = "fused", cycles_per_call: int = 1,
+             ) -> Tuple[SimState, jax.Array]:
+    """Run ``cycles`` cycles; returns
     (final_state, completions_per_cycle (cycles,)).
 
     ``unroll`` is passed to ``lax.scan``: N copies of the cycle step per
     loop iteration trade compile time (more HLO) for lower loop overhead.
+    ``impl="pallas"`` runs the cycle transition as the Pallas router
+    kernel, ``cycles_per_call`` mesh cycles per kernel launch (a static
+    inner ``fori_loop``; dispatch cost is amortized the way ``ssd_scan``
+    chunks its recurrence).  All four knobs affect speed only — the
+    per-cycle completion trace and final state are bit-identical across
+    every (impl, unroll, cycles_per_call) combination.
     ``state`` is donated — do not reuse the argument after the call.
     """
+    _check_impl(impl, cycles_per_call)
+    if impl == "pallas":
+        from repro.kernels.router_step import router_step_call
+        C = min(cycles_per_call, cycles) if cycles else 1
+        n_full, rem = divmod(cycles, C)
+
+        def body(st, _):
+            st2, done, _dr = router_step_call(cfg, prog, st, C)
+            return st2, done
+
+        state, dones = lax.scan(body, state, None, length=n_full)
+        per_cycle = dones.reshape((-1,))
+        if rem:
+            state, done_r, _dr = router_step_call(cfg, prog, state, rem)
+            per_cycle = jnp.concatenate([per_cycle, done_r])
+        return state, per_cycle
+
     def body(st, _):
-        return step(cfg, prog, st)
+        return _step_core(cfg, prog, st)
     return lax.scan(body, state, None, length=cycles, unroll=unroll)
 
 
 def _drain_loop(cfg: SimConfig, prog: Program, state: SimState,
-                max_cycles: int, check_every: int, trace: bool):
+                max_cycles: int, check_every: int, trace: bool,
+                impl: str = "fused", cycles_per_call: int = 1):
     """Shared driver for the two drain entry points: run blocks of
     ``check_every`` cycles, checking the global fence once per block (and
     recording the *exact* fence cycle from inside the block)."""
@@ -631,20 +767,47 @@ def _drain_loop(cfg: SimConfig, prog: Program, state: SimState,
         _st, _tr, i, dcyc = carry
         return (dcyc < 0) & (i < blocks)
 
-    def body(carry):
-        st, tr, i, dcyc = carry
+    if impl == "pallas":
+        from repro.kernels.router_step import router_step_call
+        # cover the K-cycle block with kernel launches; a check_every not
+        # divisible by cycles_per_call gets a short remainder launch (its
+        # own static compilation, shared across blocks)
+        C = min(cycles_per_call, K)
+        launches = [C] * (K // C) + ([K % C] if K % C else [])
 
-        def inner(c2, j):
-            st2, tr2, d2 = c2
-            st3, done = step(cfg, prog, st2)
+        def body(carry):
+            st, tr, i, dcyc = carry
+            c_start = st.cycle
+            dones, drains = [], []
+            for c in launches:
+                st, d, dr = router_step_call(cfg, prog, st, c)
+                dones.append(d)
+                drains.append(dr)
+            done_vec = jnp.concatenate(dones)        # (K,)
+            drain_vec = jnp.concatenate(drains) > 0  # (K,) post-cycle fence
             if trace:
-                tr2 = tr2.at[i * K + j].set(done)
-            d2 = jnp.where((d2 < 0) & drained(st3, prog), st3.cycle, d2)
-            return (st3, tr2, d2), None
+                tr = lax.dynamic_update_slice(tr, done_vec, (i * K,))
+            # exact fence cycle: first in-block cycle whose post-step
+            # fence held (same recording point as the fused inner scan)
+            first = jnp.argmax(drain_vec).astype(I32)
+            dcyc = jnp.where((dcyc < 0) & drain_vec.any(),
+                             c_start + first + 1, dcyc)
+            return st, tr, i + 1, dcyc
+    else:
+        def body(carry):
+            st, tr, i, dcyc = carry
 
-        (st, tr, dcyc), _ = lax.scan(inner, (st, tr, dcyc),
-                                     jnp.arange(K, dtype=I32))
-        return st, tr, i + 1, dcyc
+            def inner(c2, j):
+                st2, tr2, d2 = c2
+                st3, done = _step_core(cfg, prog, st2)
+                if trace:
+                    tr2 = tr2.at[i * K + j].set(done)
+                d2 = jnp.where((d2 < 0) & drained(st3, prog), st3.cycle, d2)
+                return (st3, tr2, d2), None
+
+            (st, tr, dcyc), _ = lax.scan(inner, (st, tr, dcyc),
+                                         jnp.arange(K, dtype=I32))
+            return st, tr, i + 1, dcyc
 
     final, tr, nblocks, dcyc = lax.while_loop(
         cond, body, (state, trace0, jnp.asarray(0, I32), d0))
@@ -652,9 +815,11 @@ def _drain_loop(cfg: SimConfig, prog: Program, state: SimState,
     return final, steps, dcyc, tr
 
 
-@functools.partial(jax.jit, static_argnums=(0, 3, 4), donate_argnums=(2,))
+@functools.partial(jax.jit, static_argnums=(0, 3, 4, 5, 6),
+                   donate_argnums=(2,))
 def run_until_drained(cfg: SimConfig, prog: Program, state: SimState,
                       max_cycles: int = 100_000, check_every: int = 1,
+                      impl: str = "fused", cycles_per_call: int = 1,
                       ) -> Tuple[SimState, jax.Array]:
     """Step until the global fence closes (or after ``max_cycles`` further
     steps); returns (final_state, drain_cycle).
@@ -664,22 +829,30 @@ def run_until_drained(cfg: SimConfig, prog: Program, state: SimState,
     The returned drain cycle is exact for any K; with K > 1 the *state*
     may have stepped up to K - 1 cycles past the fence (only
     ``SimState.cycle`` advances — a drained network is quiescent).
+    ``impl``/``cycles_per_call`` select the Pallas router kernel as in
+    :func:`simulate` (exact drain cycle for any combination).
     ``state`` is donated — do not reuse the argument after the call.
     """
+    _check_impl(impl, cycles_per_call)
     final, _steps, dcyc, _ = _drain_loop(cfg, prog, state, max_cycles,
-                                         check_every, trace=False)
+                                         check_every, False, impl,
+                                         cycles_per_call)
     return final, jnp.where(dcyc >= 0, dcyc, final.cycle)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 3, 4), donate_argnums=(2,))
+@functools.partial(jax.jit, static_argnums=(0, 3, 4, 5, 6),
+                   donate_argnums=(2,))
 def run_until_drained_traced(cfg: SimConfig, prog: Program, state: SimState,
                              max_cycles: int = 100_000, check_every: int = 1,
+                             impl: str = "fused", cycles_per_call: int = 1,
                              ) -> Tuple[SimState, jax.Array, jax.Array]:
     """Like :func:`run_until_drained` but also records the per-cycle
     completion trace into a preallocated buffer; returns
     (final_state, steps_taken, trace) — ``trace[:steps_taken]`` is valid."""
+    _check_impl(impl, cycles_per_call)
     final, steps, _dcyc, tr = _drain_loop(cfg, prog, state, max_cycles,
-                                          check_every, trace=True)
+                                          check_every, True, impl,
+                                          cycles_per_call)
     return final, steps, tr
 
 
@@ -698,19 +871,23 @@ class JaxMeshSim:
     Each ``run*`` call dispatches one jitted XLA program; repeated calls
     with the same static config reuse the compilation cache.
 
-    ``unroll`` / ``check_every`` are the jit tuning knobs of
-    :func:`simulate` / :func:`run_until_drained` (see their docstrings);
-    they affect speed only, never results.
+    ``unroll`` / ``check_every`` / ``impl`` / ``cycles_per_call`` are the
+    jit tuning knobs of :func:`simulate` / :func:`run_until_drained` (see
+    their docstrings); they affect speed only, never results.
     """
 
     def __init__(self, cfg, fifo_depth=None, max_credits=None, *,
-                 unroll: int = 1, check_every: int = 1):
+                 unroll: int = 1, check_every: int = 1,
+                 impl: str = "fused", cycles_per_call: int = 1):
         if not isinstance(cfg, SimConfig):
             # NetConfig / repro.mesh.MeshConfig share the field names
             cfg = _simconfig_from_net(cfg)
+        _check_impl(impl, cycles_per_call)
         self.cfg = cfg
         self.unroll = int(unroll)
         self.check_every = int(check_every)
+        self.impl = impl
+        self.cycles_per_call = int(cycles_per_call)
         self.state = init_state(cfg, fifo_depth=fifo_depth,
                                 max_credits=max_credits)
         self.program = _empty_program_for(cfg)
@@ -723,13 +900,15 @@ class JaxMeshSim:
 
     def run(self, cycles: int) -> None:
         self.state, per_cycle = simulate(self.cfg, self.program, self.state,
-                                         cycles, self.unroll)
+                                         cycles, self.unroll, self.impl,
+                                         self.cycles_per_call)
         self.completed_per_cycle.extend(np.asarray(per_cycle).tolist())
 
     def run_until_drained(self, max_cycles: int = 100_000) -> int:
         cycle0 = int(self.state.cycle)
         self.state, steps, trace = run_until_drained_traced(
-            self.cfg, self.program, self.state, max_cycles, self.check_every)
+            self.cfg, self.program, self.state, max_cycles, self.check_every,
+            self.impl, self.cycles_per_call)
         steps = int(steps)
         self.completed_per_cycle.extend(np.asarray(trace[:steps]).tolist())
         if steps >= max_cycles and \
