@@ -1,0 +1,140 @@
+"""Cross-topology saturation benchmark: the same uniform-random sweep on
+every supported topology of one 16x16 array.
+
+One load–latency saturation curve (phased warmup/measure/drain
+methodology, vmapped over offered loads) per topology — mesh, torus,
+ring-mesh hybrid, and the two-chip multi-chip mesh — each annotated with
+its analytic uniform-saturation bound from
+:meth:`repro.mesh.topology.Topology.uniform_saturation_bound` (a
+path-walk over the actual routing function, so the torus tie-break bias
+is priced in rather than hand-waved to the textbook ``2 x mesh``).
+
+Checks (the paper's wraparound argument, made executable):
+
+* every curve is monotone nondecreasing up to its knee;
+* the torus saturates at a strictly higher offered load than the mesh
+  (halved average hop count / doubled bisection);
+* mesh and torus knees each land within 15% of their analytic bound —
+  the acceptance bar for ``experiments/topology_saturation.json``;
+* the ring-mesh bound equals the mesh bound (wrapped rows do not move
+  the N/S bisection that uniform traffic saturates first) and its knee
+  matches the mesh knee to one grid step;
+* the multi-chip mesh saturates no later than the mesh (the serialized
+  boundary column is strictly tighter than the full bisection).
+
+``benchmarks/run.py`` writes the per-topology records to
+``experiments/topology_saturation.json`` and gates the mesh row against
+the frozen ``experiments/bench_baseline.json`` snapshot (vacuously when
+the snapshot predates topology support).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.mesh import Topology
+from repro.netsim_jax import (DEFAULT_SWEEP_RATES, compile_sweep,
+                              curve_record, load_latency_sweep,
+                              stack_rate_programs, sweep_config)
+
+from benchmarks.bench_netsim_jax import load_baseline, _speedup
+
+__all__ = ["bench_topology_saturation", "run"]
+
+# bound-vs-measured acceptance window; the rate grid steps by 0.05 near
+# the torus knee, so anything tighter would gate on grid resolution
+BOUND_TOLERANCE = 0.15
+
+TOPOLOGIES = (
+    ("mesh", Topology.mesh),
+    ("torus", Topology.torus),
+    ("ring_mesh", Topology.ring_mesh),
+    ("multi_chip", Topology.multi_chip),
+)
+
+
+def bench_topology_saturation(nx: int = 16, ny: int = 16) -> Dict:
+    """Uniform-random saturation curve per topology on one nx x ny array.
+
+    16x16 is the smallest square where the torus bound (~0.44 with the
+    tie-break bias) still sits inside the standard sweep grid — on 8x8
+    the torus bound (~0.79) is beyond any rate the open-loop methodology
+    can offer cleanly."""
+    rates = sorted(DEFAULT_SWEEP_RATES)
+    warmup, measure, drain = 300, 500, 500
+    topologies: Dict[str, Dict] = {}
+    compile_s = run_s = 0.0
+    ok = True
+    for kind, make in TOPOLOGIES:
+        topo = make()
+        cfg = sweep_config(nx, ny, topology=topo)
+        progs = stack_rate_programs("uniform", nx, ny, rates,
+                                    warmup + measure + drain, seed=0,
+                                    topology=topo)
+        compiled, cs = compile_sweep(cfg, progs, warmup=warmup,
+                                     measure=measure, drain=drain)
+        compile_s += cs
+        t0 = time.perf_counter()
+        out = load_latency_sweep("uniform", nx, ny, rates, warmup=warmup,
+                                 measure=measure, drain=drain, cfg=cfg,
+                                 compiled=compiled, seed=0)
+        run_s += time.perf_counter() - t0
+        rec = curve_record(out)
+        bound = topo.uniform_saturation_bound(nx, ny)
+        rec["analytic_saturation_bound"] = round(float(bound), 4)
+        sat = rec["saturation_rate"]
+        rec["within_bound_tolerance"] = (
+            sat is not None and
+            abs(sat - bound) <= BOUND_TOLERANCE * bound)
+        topologies[kind] = rec
+        ok &= bool(out["monotone"])
+
+    mesh, torus = topologies["mesh"], topologies["torus"]
+    ring, multi = topologies["ring_mesh"], topologies["multi_chip"]
+    grid_step = max(b - a for a, b in zip(rates, rates[1:]))
+    checks = {
+        "curves_monotone": bool(ok),
+        "torus_saturates_above_mesh":
+            torus["saturation_rate"] is not None and
+            mesh["saturation_rate"] is not None and
+            torus["saturation_rate"] > mesh["saturation_rate"],
+        "mesh_within_15pct_of_bound": bool(mesh["within_bound_tolerance"]),
+        "torus_within_15pct_of_bound": bool(torus["within_bound_tolerance"]),
+        "ring_mesh_bound_equals_mesh_bound":
+            ring["analytic_saturation_bound"] ==
+            mesh["analytic_saturation_bound"],
+        "ring_mesh_knee_matches_mesh":
+            ring["saturation_rate"] is not None and
+            abs(ring["saturation_rate"] - mesh["saturation_rate"])
+            <= grid_step + 1e-9,
+        "multi_chip_saturates_no_later_than_mesh":
+            multi["saturation_rate"] is not None and
+            multi["saturation_rate"] <= mesh["saturation_rate"],
+    }
+    wall = compile_s + run_s
+    base = load_baseline().get("topology_saturation_16x16", {})
+    return {"name": "topology_saturation_16x16", "mesh": f"{nx}x{ny}",
+            "pattern": "uniform", "bound_tolerance": BOUND_TOLERANCE,
+            "topologies": topologies, "checks": checks,
+            "compile_s": round(compile_s, 2), "run_s": round(run_s, 2),
+            "wall_s_incl_compile": round(wall, 2),
+            "baseline_wall_s": base.get("wall_s_incl_compile"),
+            "speedup_vs_baseline": _speedup(base.get("wall_s_incl_compile"),
+                                            wall),
+            "ok": all(checks.values())}
+
+
+def run() -> List[Dict]:
+    out = []
+    for fn in (bench_topology_saturation,):
+        t0 = time.perf_counter()
+        rec = fn()
+        rec["wall_s"] = round(time.perf_counter() - t0, 2)
+        out.append(rec)
+        status = "OK " if rec.get("ok") else "FAIL"
+        print(f"[{status}] {rec['name']:32s} {rec}", flush=True)
+    return out
+
+
+if __name__ == "__main__":
+    run()

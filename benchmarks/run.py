@@ -5,7 +5,8 @@
 
 Writes a JSON summary to experiments/bench_results.json; the netsim_jax
 load–latency saturation curves are additionally written to
-experiments/load_latency.json (uploaded as a CI artifact).
+experiments/load_latency.json, and the cross-topology saturation records
+to experiments/topology_saturation.json (uploaded as CI artifacts).
 
 Every run also APPENDS a trajectory entry to experiments/BENCH_netsim.json
 — per-benchmark wall seconds with compile time and run time recorded
@@ -26,8 +27,8 @@ import time
 from pathlib import Path
 from typing import Dict, List
 
-SUITES = ("netsim", "netsim_jax", "workloads", "collectives", "kernels",
-          "train")
+SUITES = ("netsim", "netsim_jax", "topology", "workloads", "collectives",
+          "kernels", "train")
 
 # trajectory entries keep only the timing/health fields, not full payloads
 _TRAJECTORY_KEYS = ("wall_s", "compile_s", "run_s", "wall_s_incl_compile",
@@ -68,6 +69,33 @@ def gate_step_throughput(results: Dict[str, List[Dict]],
         print(f"[OK ] step-throughput gate: every mesh >= {floor} x "
               f"baseline cycles/s", flush=True)
     return ok
+
+
+def gate_topology_saturation(results: Dict[str, List[Dict]],
+                             floor: float = STEP_THROUGHPUT_FLOOR) -> bool:
+    """Gate the cross-topology saturation sweep's MESH row against the
+    frozen baseline: the plain-mesh saturation rate must not fall below
+    ``floor`` x the snapshot's (the other topologies have no pre-topology
+    baseline to compare to, and their cross-checks live in the suite's
+    own ``checks``).  Vacuously True when either side lacks the record —
+    in particular when ``bench_baseline.json`` predates topology
+    support."""
+    from benchmarks.bench_netsim_jax import load_baseline
+    base = load_baseline().get("topology_saturation_16x16", {})
+    recs = [r for r in results.get("topology", [])
+            if r.get("name") == "topology_saturation_16x16"]
+    want = base.get("topologies", {}).get("mesh", {}).get("saturation_rate")
+    got = (recs[0].get("topologies", {}).get("mesh", {})
+           .get("saturation_rate")) if recs else None
+    if want is None or got is None:
+        return True
+    if float(got) < floor * float(want):
+        print(f"[FAIL] mesh saturation regression: {float(got):.3f} < "
+              f"{floor} x baseline {float(want):.3f}", flush=True)
+        return False
+    print(f"[OK ] topology gate: mesh saturation {float(got):.3f} >= "
+          f"{floor} x baseline {float(want):.3f}", flush=True)
+    return True
 
 
 def trajectory_entry(results: Dict[str, List[Dict]], wall: float) -> Dict:
@@ -153,6 +181,14 @@ def main(argv=None) -> int:
         with open(out / "load_latency.json", "w") as f:
             json.dump(sweeps[0], f, indent=1, default=str)
         print(f"wrote {out / 'load_latency.json'}")
+    # standalone artifact: the cross-topology saturation records (the
+    # acceptance artifact for the torus-vs-mesh wraparound claim)
+    topo = [r for r in results.get("topology", [])
+            if r.get("name") == "topology_saturation_16x16"]
+    if topo:
+        with open(out / "topology_saturation.json", "w") as f:
+            json.dump(topo[0], f, indent=1, default=str)
+        print(f"wrote {out / 'topology_saturation.json'}")
     # standalone artifact: the parity-checked workload reports + fitted
     # congestion model from the workloads suite
     wl = [r for r in results.get("workloads", [])
@@ -164,6 +200,7 @@ def main(argv=None) -> int:
     # PR-over-PR timing trajectory (appended, never overwritten)
     print(f"appended {append_trajectory(out, trajectory_entry(results, wall))}")
     gate_ok = gate_step_throughput(results)
+    gate_ok &= gate_topology_saturation(results)
     if crashed:
         print(f"FAILED: suite(s) crashed: {', '.join(crashed)}")
         return 1

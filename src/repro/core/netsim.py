@@ -83,6 +83,22 @@ class NetConfig:
     mem_words: int = 64           # local memory region per tile
     resp_latency: int = 1         # >=1: "response at least one cycle later"
     record_log: bool = False      # keep a full per-response log
+    # network topology (repro.mesh.topology.Topology); None -> plain mesh.
+    # Typed loosely and imported lazily: repro.mesh imports this module at
+    # package-init time, so a module-level topology import would cycle.
+    topology: Optional[object] = None
+
+    def __post_init__(self):
+        from repro.mesh.topology import Topology
+        if self.topology is None:
+            self.topology = Topology.mesh()
+        self.topology.validate_for(self.nx, self.ny)
+        if (self.topology.wrap_x or self.topology.wrap_y) \
+                and self.router_fifo < 2:
+            raise ValueError(
+                "wrapped (ring/torus) topologies need router_fifo >= 2: "
+                "the ring bubble flow control reserves one slot for "
+                f"entering packets, got router_fifo={self.router_fifo}")
 
 
 class _Fifos:
@@ -139,6 +155,7 @@ class MeshSim:
 
     def __init__(self, cfg: NetConfig, seed: int = 0):
         self.cfg = cfg
+        self.topo = cfg.topology
         ny, nx = cfg.ny, cfg.nx
         self.cycle = 0
         self.rng = np.random.default_rng(seed)
@@ -211,12 +228,12 @@ class MeshSim:
     # per-cycle pieces
     # ------------------------------------------------------------------
     def _route(self, heads: Dict[str, np.ndarray]) -> np.ndarray:
-        """XY dimension-ordered output port for each head packet."""
+        """Dimension-ordered output port for each head packet — the
+        pluggable routing decision (:meth:`repro.mesh.topology.Topology.route`,
+        shared verbatim with the JAX/Pallas backends)."""
         dx, dy = heads["dst_x"], heads["dst_y"]
         x, y = self._xs[..., None], self._ys[..., None]
-        out = np.where(dx > x, E, np.where(dx < x, W,
-              np.where(dy > y, S, np.where(dy < y, N, P))))
-        return out
+        return self.topo.route(dx, dy, x, y, self.cfg.nx, self.cfg.ny, xp=np)
 
     def _router_step(self, net: _Fifos, rr: np.ndarray,
                      deliver_space: np.ndarray,
@@ -230,28 +247,70 @@ class MeshSim:
         Returns the packets delivered out of the P port (fields + 'valid').
         """
         cfg = self.cfg
+        topo = self.topo
         heads = net.peek()
         valid = net.count > 0                       # (ny, nx, 5)
         want = self._route(heads)                   # desired output port
 
-        # Structural turn restriction: N must never request E or W.
+        # Structural turn restriction: N must never request E or W (holds
+        # on every topology — routing is X-then-Y and the Y phase never
+        # re-enters X).
         assert not (valid[..., N] & ((want[..., N] == E) | (want[..., N] == W))).any(), \
             "illegal N->E/W turn generated"
 
-        # Destination space per output port (start-of-cycle, conservative).
+        # Destination space per output port (start-of-cycle, conservative);
+        # wrapped dimensions connect the array edges into rings.
         space = net.space()                         # (ny, nx, 5) input FIFOs
         out_space = np.zeros((cfg.ny, cfg.nx, NUM_DIRS), bool)
         out_space[..., P] = deliver_space
-        out_space[:, :-1, E] = space[:, 1:, W]      # east edge: no space
-        out_space[:, 1:, W] = space[:, :-1, E]
-        out_space[:-1, :, S] = space[1:, :, N]
-        out_space[1:, :, N] = space[:-1, :, S]
+        if topo.wrap_x:
+            out_space[..., E] = np.roll(space[..., W], -1, axis=1)
+            out_space[..., W] = np.roll(space[..., E], 1, axis=1)
+        else:
+            out_space[:, :-1, E] = space[:, 1:, W]  # east edge: no space
+            out_space[:, 1:, W] = space[:, :-1, E]
+        if topo.wrap_y:
+            out_space[..., S] = np.roll(space[..., N], -1, axis=0)
+            out_space[..., N] = np.roll(space[..., S], 1, axis=0)
+        else:
+            out_space[:-1, :, S] = space[1:, :, N]
+            out_space[1:, :, N] = space[:-1, :, S]
+
+        # Multi-chip boundary links accept one flit every boundary_period
+        # cycles — the narrower off-chip channel (both networks share the
+        # cycle counter, so both are gated identically).
+        if topo.gated and (self.cycle % topo.boundary_period) != 0:
+            for c in topo.boundary_cols(cfg.nx):
+                out_space[:, c - 1, E] = False
+                out_space[:, c, W] = False
+
+        # Ring bubble flow control: a packet ENTERING a wrapped-dimension
+        # ring needs TWO free slots in the target FIFO, a packet
+        # CONTINUING around it the usual one — every ring keeps a bubble,
+        # so dimension-ordered routing stays deadlock-free on rings (see
+        # repro.mesh.topology).  bubble[o] is the continuing input port.
+        bubble: Dict[int, int] = {}
+        out_space2 = None
+        if topo.wrap_x or topo.wrap_y:
+            space2 = net.count <= net.depth - 2
+            out_space2 = np.zeros((cfg.ny, cfg.nx, NUM_DIRS), bool)
+            if topo.wrap_x:
+                out_space2[..., E] = np.roll(space2[..., W], -1, axis=1)
+                out_space2[..., W] = np.roll(space2[..., E], 1, axis=1)
+                bubble[E], bubble[W] = W, E
+            if topo.wrap_y:
+                out_space2[..., S] = np.roll(space2[..., N], -1, axis=0)
+                out_space2[..., N] = np.roll(space2[..., S], 1, axis=0)
+                bubble[S], bubble[N] = N, S
 
         # Round-robin arbitration: for each output port o pick the valid
         # requester with minimal (in_port - rr[o]) mod 5.
         winners = np.full((cfg.ny, cfg.nx, NUM_DIRS), -1, np.int64)
         for o in range(NUM_DIRS):
             cand = valid & (want == o) & out_space[..., o:o + 1]
+            if o in bubble:
+                entering = np.arange(NUM_DIRS) != bubble[o]     # (5,) inputs
+                cand = cand & (out_space2[..., o:o + 1] | ~entering)
             prio = (np.arange(NUM_DIRS)[None, None, :] - rr[..., o:o + 1]) % NUM_DIRS
             prio = np.where(cand, prio, NUM_DIRS + 1)
             best = prio.min(-1)
@@ -292,10 +351,28 @@ class MeshSim:
                           (np.arange(NUM_DIRS) == in_port),
                           {k: v[..., None].repeat(NUM_DIRS, -1) for k, v in shifted.items()})
 
-        _push_dir(E, np.s_[:, 1:], np.s_[:, :-1], W)
-        _push_dir(W, np.s_[:, :-1], np.s_[:, 1:], E)
-        _push_dir(S, np.s_[1:, :], np.s_[:-1, :], N)
-        _push_dir(N, np.s_[:-1, :], np.s_[1:, :], S)
+        def _push_roll(o, shift, axis, in_port):
+            # wrapped-dimension push: the edge output feeds the opposite edge
+            has, pkt = moved[o]
+            mask = np.roll(has, shift, axis=axis)
+            shifted = {k: np.roll(pkt[k], shift, axis=axis)
+                       for k in _PKT_FIELDS}
+            net.push_mask(mask[..., None].repeat(NUM_DIRS, -1) &
+                          (np.arange(NUM_DIRS) == in_port),
+                          {k: v[..., None].repeat(NUM_DIRS, -1) for k, v in shifted.items()})
+
+        if topo.wrap_x:
+            _push_roll(E, 1, 1, W)
+            _push_roll(W, -1, 1, E)
+        else:
+            _push_dir(E, np.s_[:, 1:], np.s_[:, :-1], W)
+            _push_dir(W, np.s_[:, :-1], np.s_[:, 1:], E)
+        if topo.wrap_y:
+            _push_roll(S, 1, 0, N)
+            _push_roll(N, -1, 0, S)
+        else:
+            _push_dir(S, np.s_[1:, :], np.s_[:-1, :], N)
+            _push_dir(N, np.s_[:-1, :], np.s_[1:, :], S)
 
         has_p, pkt_p = moved[P]
         delivered_valid = has_p

@@ -32,6 +32,14 @@ Design notes:
   :mod:`repro.kernels.backend`: native Mosaic on TPU, interpret mode
   (same traced program through XLA) everywhere else — CI on CPU checks
   correctness, not speed.
+* **Topologies.** The topology (mesh / torus / ring-mesh / multi-chip,
+  :mod:`repro.mesh.topology`) lives in the hashable ``SimConfig`` closed
+  over by the kernel body, so every topology the fused step supports runs
+  in the kernel — compiled and interpret alike — with no changes here:
+  the wrap connectivity is static slice+concat (``jnp.roll`` would not
+  lower on Mosaic), the routing function is pure ``where`` arithmetic,
+  and the boundary gate compares against ``broadcasted_iota`` columns.
+  Cross-topology bit-identity is enforced by ``tests/test_topology.py``.
 """
 from __future__ import annotations
 

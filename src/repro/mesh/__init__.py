@@ -21,6 +21,7 @@ user design plug into the mesh.  It provides
 """
 from . import encoding  # noqa: F401
 from .config import MeshConfig  # noqa: F401
+from .topology import Topology  # noqa: F401
 from .encoding import validate_program  # noqa: F401
 from .endpoint import (DmaEndpoint, Endpoint,  # noqa: F401
                        MemoryControllerEndpoint, ProgramEndpoint, Request,
@@ -32,7 +33,7 @@ from .traffic import (PATTERNS, PROG_KEYS, bit_complement,  # noqa: F401
                       empty_program, hotspot, make_traffic,
                       nearest_neighbor, tornado, transpose, uniform_random)
 
-__all__ = ["MeshConfig", "Simulator", "BACKENDS", "Telemetry",
+__all__ = ["MeshConfig", "Topology", "Simulator", "BACKENDS", "Telemetry",
            "encoding", "validate_program", "PORT_NAMES", "render_heatmap",
            "TELEMETRY_ARRAY_FIELDS", "Endpoint", "Request", "Response",
            "ProgramEndpoint", "DmaEndpoint", "MemoryControllerEndpoint",

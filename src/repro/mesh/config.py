@@ -20,8 +20,10 @@ stay importable on a machine that only wants the numpy oracle.
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 from repro.core.netsim import NetConfig
+from repro.mesh.topology import Topology
 
 __all__ = ["MeshConfig"]
 
@@ -42,12 +44,18 @@ class MeshConfig:
     mem_words: int = 64
     resp_latency: int = 1
     record_log: bool = False      # numpy oracle only; dropped by to_sim()
+    # network topology (mesh / torus / ring_mesh / multi_chip); None is
+    # normalized to the plain mesh so existing call sites are unchanged
+    topology: Optional[Topology] = None
 
     def __post_init__(self):
         if self.nx < 1 or self.ny < 1:
             raise ValueError(
                 f"mesh dimensions must be positive, got nx={self.nx}, "
                 f"ny={self.ny}")
+        if self.topology is None:
+            object.__setattr__(self, "topology", Topology.mesh())
+        self.topology.validate_for(self.nx, self.ny)
 
     # -- NetConfig (numpy oracle) --------------------------------------
     @classmethod
@@ -55,7 +63,7 @@ class MeshConfig:
         return cls(nx=cfg.nx, ny=cfg.ny, router_fifo=cfg.router_fifo,
                    ep_fifo=cfg.ep_fifo, max_out_credits=cfg.max_out_credits,
                    mem_words=cfg.mem_words, resp_latency=cfg.resp_latency,
-                   record_log=cfg.record_log)
+                   record_log=cfg.record_log, topology=cfg.topology)
 
     def to_net(self) -> NetConfig:
         return NetConfig(nx=self.nx, ny=self.ny, router_fifo=self.router_fifo,
@@ -63,7 +71,7 @@ class MeshConfig:
                          max_out_credits=self.max_out_credits,
                          mem_words=self.mem_words,
                          resp_latency=self.resp_latency,
-                         record_log=self.record_log)
+                         record_log=self.record_log, topology=self.topology)
 
     # -- SimConfig (JAX backend) ---------------------------------------
     @classmethod
@@ -72,7 +80,8 @@ class MeshConfig:
         JAX stack is not imported just to read a dataclass)."""
         return cls(nx=cfg.nx, ny=cfg.ny, router_fifo=cfg.router_fifo,
                    ep_fifo=cfg.ep_fifo, max_out_credits=cfg.max_out_credits,
-                   mem_words=cfg.mem_words, resp_latency=cfg.resp_latency)
+                   mem_words=cfg.mem_words, resp_latency=cfg.resp_latency,
+                   topology=getattr(cfg, "topology", None))
 
     def to_sim(self):
         """To :class:`repro.netsim_jax.sim.SimConfig` (drops ``record_log``,
@@ -82,7 +91,8 @@ class MeshConfig:
                          ep_fifo=self.ep_fifo,
                          max_out_credits=self.max_out_credits,
                          mem_words=self.mem_words,
-                         resp_latency=self.resp_latency)
+                         resp_latency=self.resp_latency,
+                         topology=self.topology)
 
     # -- normalization -------------------------------------------------
     @classmethod

@@ -45,7 +45,7 @@ __all__ = ["COORD_BITS", "COORD_LIMIT", "COORD_MASK", "OP_BITS", "OP_LIMIT",
            "SRC_Y_SHIFT", "OP_SHIFT", "HEADER_FIELDS", "pack_header",
            "pack_dst_op", "with_src", "swap_for_response", "hdr_dst_x",
            "hdr_dst_y", "hdr_src_x", "hdr_src_y", "hdr_op", "decode_header",
-           "validate_program"]
+           "chip_split", "chip_join", "validate_program"]
 
 COORD_BITS = 7
 COORD_LIMIT = 1 << COORD_BITS          # 128: max mesh extent per dimension
@@ -133,9 +133,34 @@ def decode_header(hdr) -> Dict[str, np.ndarray]:
 _I32 = np.iinfo(np.int32)
 
 
+# ----------------------------------------------------------------------
+# multi-chip coordinates
+# ----------------------------------------------------------------------
+# On a multi-chip topology (repro.mesh.topology.Topology.multi_chip) the
+# global x coordinate *contains* the chip id: chip boundaries fall on
+# multiples of the chip width, so x = chip * width + local_x.  The packed
+# header needs no extra bits — BSG Ten's scheme, where the off-chip hop
+# is address-transparent.  These helpers make the containment explicit
+# (and testable): split/join are exact inverses for every representable
+# coordinate, so the chip-id "bits" round-trip through the header.
+
+def chip_split(x, topology, nx: int):
+    """``(chip_id, local_x)`` of a global x coordinate under a multi-chip
+    ``topology`` on an ``nx``-wide array.  Elementwise (ints or arrays)."""
+    w = topology.chip_width(nx)
+    return x // w, x % w
+
+
+def chip_join(chip, local_x, topology, nx: int):
+    """Global x coordinate of ``(chip_id, local_x)`` — the exact inverse
+    of :func:`chip_split`."""
+    return chip * topology.chip_width(nx) + local_x
+
+
 def validate_program(entries: Dict[str, np.ndarray],
                      nx: Optional[int] = None,
-                     ny: Optional[int] = None) -> None:
+                     ny: Optional[int] = None,
+                     topology=None) -> None:
     """Reject injection programs whose packets cannot be represented.
 
     For every non-padding entry (``op >= 0``):
@@ -149,8 +174,17 @@ def validate_program(entries: Dict[str, np.ndarray],
       JAX simulator's lane width; the numpy oracle is int64 but the
       facade applies one limit so programs stay portable).
 
+    When ``topology`` is given it is checked against the array shape
+    (:meth:`repro.mesh.topology.Topology.validate_for` — e.g. multi-chip
+    needs ``nx`` divisible into equal-width chips).  Destination
+    coordinates themselves are topology-independent: they are global
+    (the chip id is contained in the x coordinate, see
+    :func:`chip_split`), so the same bounds apply on every topology.
+
     Raises ``ValueError`` naming the offending field and its bound.
     """
+    if topology is not None and nx is not None and ny is not None:
+        topology.validate_for(nx, ny)
     op = np.asarray(entries["op"])
     live = op >= 0
     bounds = {

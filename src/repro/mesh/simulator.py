@@ -205,7 +205,8 @@ class Simulator:
         # one packet-domain contract for BOTH backends: coordinates and
         # opcode must fit the packed header widths (and the mesh), payload
         # lanes must fit int32 — the error names the offending field
-        validate_program(entries, nx=self.cfg.nx, ny=self.cfg.ny)
+        validate_program(entries, nx=self.cfg.nx, ny=self.cfg.ny,
+                         topology=self.cfg.topology)
         op = np.asarray(entries["op"])
         for (y, x) in self._endpoints:
             if (op[y, x] >= 0).any():

@@ -67,8 +67,10 @@ def _base(nx: int, ny: int, length: int, rate: float, op: int,
 # ----------------------------------------------------------------------
 def uniform_random(nx: int, ny: int, length: int, *, rate: float = 1.0,
                    op: int = OP_STORE, mem_words: int = 64,
-                   seed: int = 0) -> Dict[str, np.ndarray]:
-    """Every packet targets a uniformly random *other* tile."""
+                   seed: int = 0, topology=None) -> Dict[str, np.ndarray]:
+    """Every packet targets a uniformly random *other* tile (the pattern
+    itself is topology-independent; ``topology`` is accepted so every
+    generator has a uniform signature)."""
     prog, rng = _base(nx, ny, length, rate, op, mem_words, seed)
     n = ny * nx
     src = np.arange(n).reshape(ny, nx, 1)
@@ -80,9 +82,11 @@ def uniform_random(nx: int, ny: int, length: int, *, rate: float = 1.0,
 
 def transpose(nx: int, ny: int, length: int, *, rate: float = 1.0,
               op: int = OP_STORE, mem_words: int = 64,
-              seed: int = 0) -> Dict[str, np.ndarray]:
-    """(x, y) -> (y, x).  Only defined on square meshes — on a non-square
-    mesh the transposed coordinate falls off the array."""
+              seed: int = 0, topology=None) -> Dict[str, np.ndarray]:
+    """(x, y) -> (y, x).  Only defined on square arrays — on a non-square
+    array the transposed coordinate falls off the edge (wraparound does
+    not help: the transpose of a valid coordinate must itself be a valid
+    coordinate, so the constraint is the same on every topology)."""
     if nx != ny:
         raise ValueError(
             f"transpose traffic is undefined on a non-square mesh "
@@ -96,7 +100,7 @@ def transpose(nx: int, ny: int, length: int, *, rate: float = 1.0,
 
 def bit_complement(nx: int, ny: int, length: int, *, rate: float = 1.0,
                    op: int = OP_STORE, mem_words: int = 64,
-                   seed: int = 0) -> Dict[str, np.ndarray]:
+                   seed: int = 0, topology=None) -> Dict[str, np.ndarray]:
     """(x, y) -> (nx-1-x, ny-1-y): every packet crosses both bisections."""
     prog, _ = _base(nx, ny, length, rate, op, mem_words, seed)
     ys, xs = np.mgrid[0:ny, 0:nx]
@@ -105,22 +109,38 @@ def bit_complement(nx: int, ny: int, length: int, *, rate: float = 1.0,
     return prog
 
 
+def _tornado_shift(k: int, wrap: bool) -> int:
+    """Tornado offset along one dimension of extent ``k``.
+
+    The classic tornado pattern is torus-relative: shift ``floor(k/2)``
+    with wraparound, so minimal routes all march the same way around the
+    ring and saturate it.  On a non-wrapped dimension that offset cannot
+    wrap, so the adversarial offset is the near-half-way
+    ``ceil(k/2) - 1`` (Dally & Towles §3.2) — which is also what keeps
+    the mesh tornado baselines bit-identical to the pre-topology code.
+    """
+    return (k // 2) if wrap else max(math.ceil(k / 2) - 1, 0)
+
+
 def tornado(nx: int, ny: int, length: int, *, rate: float = 1.0,
             op: int = OP_STORE, mem_words: int = 64,
-            seed: int = 0) -> Dict[str, np.ndarray]:
-    """Each dimension shifts by ceil(k/2) - 1 — the adversarial near-half-way
-    offset (Dally & Towles §3.2)."""
+            seed: int = 0, topology=None) -> Dict[str, np.ndarray]:
+    """Each dimension shifts by the tornado offset (see
+    :func:`_tornado_shift`): ``floor(k/2)`` with wraparound on wrapped
+    (ring/torus) dimensions, ``ceil(k/2) - 1`` on mesh dimensions."""
     prog, _ = _base(nx, ny, length, rate, op, mem_words, seed)
+    wrap_x = topology is not None and topology.wrap_x
+    wrap_y = topology is not None and topology.wrap_y
     ys, xs = np.mgrid[0:ny, 0:nx]
-    prog["dst_x"][:] = ((xs + max(math.ceil(nx / 2) - 1, 0)) % nx)[..., None]
-    prog["dst_y"][:] = ((ys + max(math.ceil(ny / 2) - 1, 0)) % ny)[..., None]
+    prog["dst_x"][:] = ((xs + _tornado_shift(nx, wrap_x)) % nx)[..., None]
+    prog["dst_y"][:] = ((ys + _tornado_shift(ny, wrap_y)) % ny)[..., None]
     return prog
 
 
 def hotspot(nx: int, ny: int, length: int, *, rate: float = 1.0,
             op: int = OP_STORE, mem_words: int = 64, seed: int = 0,
             spot: Optional[Tuple[int, int]] = None,
-            fraction: float = 0.5) -> Dict[str, np.ndarray]:
+            fraction: float = 0.5, topology=None) -> Dict[str, np.ndarray]:
     """A ``fraction`` of packets hammer one hot tile (default: the center);
     the rest are uniform random over the other tiles."""
     if not 0.0 < fraction <= 1.0:
@@ -143,7 +163,7 @@ def hotspot(nx: int, ny: int, length: int, *, rate: float = 1.0,
 
 def nearest_neighbor(nx: int, ny: int, length: int, *, rate: float = 1.0,
                      op: int = OP_STORE, mem_words: int = 64,
-                     seed: int = 0) -> Dict[str, np.ndarray]:
+                     seed: int = 0, topology=None) -> Dict[str, np.ndarray]:
     """Each tile streams to its east neighbour (wrapping at the edge) — the
     paper's line-rate one-to-one pattern at array scale."""
     prog, _ = _base(nx, ny, length, rate, op, mem_words, seed)
@@ -168,9 +188,16 @@ def make_traffic(pattern: str, nx: int, ny: int, length: int,
     """Dispatch by pattern name (see :data:`PATTERNS`); keyword arguments
     are forwarded to the generator (``rate``, ``op``, ``seed``, ...).
 
-    Raises :class:`ValueError` for unknown patterns, an injection rate
-    outside ``(0, 1]``, invalid hotspot parameters (a ``spot`` outside the
-    mesh or a ``fraction`` outside ``(0, 1]``), or a mesh on which the
+    Every generator accepts ``topology=`` (a
+    :class:`repro.mesh.topology.Topology`); patterns whose classic
+    definition is topology-relative (tornado) use it, the rest accept and
+    ignore it so callers can thread one topology through uniformly.
+
+    Raises :class:`ValueError` — one clear error per invalid combination —
+    for unknown patterns, an injection rate outside ``(0, 1]``, invalid
+    hotspot parameters (a ``spot`` outside the mesh or a ``fraction``
+    outside ``(0, 1]``), a topology that cannot be laid onto the array
+    (multi-chip with indivisible ``nx``), or an array on which the
     pattern is undefined (e.g. transpose on a non-square mesh).
     """
     try:
@@ -178,4 +205,7 @@ def make_traffic(pattern: str, nx: int, ny: int, length: int,
     except KeyError:
         raise ValueError(
             f"unknown pattern {pattern!r}; known: {sorted(PATTERNS)}") from None
+    topo = kw.get("topology")
+    if topo is not None:
+        topo.validate_for(nx, ny)
     return fn(nx, ny, length, **kw)

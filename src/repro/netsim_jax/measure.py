@@ -61,10 +61,12 @@ DEFAULT_SWEEP_RATES = (0.02, 0.05, 0.1, 0.15, 0.2, 0.25, 0.3, 0.35,
                        0.4, 0.45, 0.5, 0.55)
 
 
-def sweep_config(nx: int, ny: int) -> MeshConfig:
+def sweep_config(nx: int, ny: int, topology=None) -> MeshConfig:
     """Mesh configuration for saturation sweeps: buffering deep enough
-    that flow control, not storage, is the limit."""
-    return MeshConfig(nx=nx, ny=ny, max_out_credits=128, router_fifo=16)
+    that flow control, not storage, is the limit.  ``topology`` selects
+    the network topology (default: the plain mesh)."""
+    return MeshConfig(nx=nx, ny=ny, max_out_credits=128, router_fifo=16,
+                      topology=topology)
 
 
 def _as_simconfig(cfg) -> SimConfig:
@@ -312,6 +314,9 @@ def load_latency_sweep(pattern: str, nx: int, ny: int,
     :func:`repro.netsim_jax.simulate` (results identical)."""
     rates = sorted(float(r) for r in rates)
     cfg = SimConfig(nx=nx, ny=ny) if cfg is None else _as_simconfig(cfg)
+    # topology-aware patterns (tornado) must see the topology the sim
+    # runs on; an explicit traffic_kw["topology"] still wins
+    traffic_kw.setdefault("topology", cfg.topology)
     horizon = warmup + measure + drain
     progs = stack_rate_programs(pattern, nx, ny, rates, horizon, **traffic_kw)
     if compiled is None:
@@ -334,6 +339,7 @@ def load_latency_sweep(pattern: str, nx: int, ny: int,
     out["rates"] = np.asarray(rates)
     out["pattern"] = pattern
     out["mesh"] = f"{nx}x{ny}"
+    out["topology"] = cfg.topology.kind
     out["zero_load_latency"] = float(out["lat_mean"][0])
     sat = saturation_point(out["lat_mean"])
     out["saturation_index"] = sat

@@ -71,6 +71,7 @@ from repro.mesh.encoding import (COORD_LIMIT, COORD_MASK, DST_Y_SHIFT,
                                  OP_MASK, OP_SHIFT, pack_dst_op,
                                  swap_for_response, validate_program,
                                  with_src)
+from repro.mesh.topology import Topology
 
 __all__ = ["SimConfig", "SimState", "Fifo", "Program", "FWD", "REV",
            "init_state", "load_program", "empty_program_for", "step",
@@ -110,6 +111,11 @@ class SimConfig:
     max_out_credits: int = 16
     mem_words: int = 64
     resp_latency: int = 1
+    # network topology; None is normalized to the plain mesh.  Topology is
+    # frozen/hashable, so the config stays a valid jit static — the wrap
+    # flags and boundary gating become *compile-time* branches and the
+    # mesh trace is byte-identical to the pre-topology code.
+    topology: Optional[Topology] = None
 
     def __post_init__(self):
         if not (0 < self.nx <= COORD_LIMIT and 0 < self.ny <= COORD_LIMIT):
@@ -117,6 +123,15 @@ class SimConfig:
                 f"mesh dimensions must be in [1, {COORD_LIMIT}] to fit the "
                 f"packed header coordinate fields, got nx={self.nx}, "
                 f"ny={self.ny}")
+        if self.topology is None:
+            object.__setattr__(self, "topology", Topology.mesh())
+        self.topology.validate_for(self.nx, self.ny)
+        if (self.topology.wrap_x or self.topology.wrap_y) \
+                and self.router_fifo < 2:
+            raise ValueError(
+                "wrapped (ring/torus) topologies need router_fifo >= 2: "
+                "the ring bubble flow control reserves one slot for "
+                f"entering packets, got router_fifo={self.router_fifo}")
 
     @classmethod
     def from_netconfig(cls, cfg: NetConfig) -> "SimConfig":
@@ -139,13 +154,15 @@ class SimConfig:
                          ep_fifo=self.ep_fifo,
                          max_out_credits=self.max_out_credits,
                          mem_words=self.mem_words,
-                         resp_latency=self.resp_latency, **kw)
+                         resp_latency=self.resp_latency,
+                         topology=self.topology, **kw)
 
 
 def _simconfig_from_net(cfg: NetConfig) -> "SimConfig":
     return SimConfig(nx=cfg.nx, ny=cfg.ny, router_fifo=cfg.router_fifo,
                      ep_fifo=cfg.ep_fifo, max_out_credits=cfg.max_out_credits,
-                     mem_words=cfg.mem_words, resp_latency=cfg.resp_latency)
+                     mem_words=cfg.mem_words, resp_latency=cfg.resp_latency,
+                     topology=getattr(cfg, "topology", None))
 
 
 class Fifo(NamedTuple):
@@ -329,8 +346,9 @@ def _fifo_push(f: Fifo, mask: jax.Array, pkt: jax.Array,
 # ----------------------------------------------------------------------
 # router — one fused pass over the stacked (fwd, rev) network axis
 # ----------------------------------------------------------------------
-def _arbitrate_fused(net: Fifo, rr: jax.Array, xs, ys,
-                     depth: jax.Array, kernel_safe: bool = False,
+def _arbitrate_fused(cfg: SimConfig, net: Fifo, rr: jax.Array, xs, ys,
+                     depth: jax.Array, cycle: jax.Array,
+                     kernel_safe: bool = False,
                      ) -> Tuple[jax.Array, jax.Array]:
     """Routing + round-robin arbitration for BOTH networks in one traced
     pass (mirrors the first half of ``MeshSim._router_step``, stacked).
@@ -344,29 +362,63 @@ def _arbitrate_fused(net: Fifo, rr: jax.Array, xs, ys,
     changing any other column — this is what lets the two networks share
     one arbitration trace even though the forward network's deliver space
     depends on the endpoint service step that *reads* the reverse
-    network's results.
+    network's results.  (The topology's wrap/bubble/boundary terms below
+    never touch the P column either, preserving that property.)
     """
+    topo = cfg.topology
     heads = _fifo_peek(net)                     # (F, 2, ny, nx, 5)
     valid = net.count > 0                       # (2, ny, nx, 5)
-    # XY dimension-ordered routing straight off the packed header word
+    # dimension-ordered routing straight off the packed header word — the
+    # pluggable decision shared verbatim with the numpy oracle
     h = heads[_FI["hdr"]]
     dx, dy = h & COORD_MASK, (h >> DST_Y_SHIFT) & COORD_MASK
     x, y = xs[None, :, :, None], ys[None, :, :, None]
-    want = jnp.where(dx > x, E, jnp.where(dx < x, W,
-           jnp.where(dy > y, S, jnp.where(dy < y, N, P)))).astype(I32)
+    want = topo.route(dx, dy, x, y, cfg.nx, cfg.ny, xp=jnp).astype(I32)
 
     # Destination space per output port (start-of-cycle, conservative),
     # assembled with shifts + one stack; the P column is provisionally
-    # True (the deliver gate is applied in _finalize).
+    # True (the deliver gate is applied in _finalize).  Wrapped dimensions
+    # connect the edges (static slice+concat — jnp.roll does not lower in
+    # the Pallas kernel); non-wrapped dimensions keep the pad form.
     space = net.count < depth                   # (2, ny, nx, 5)
     pad = functools.partial(jnp.pad, mode="constant", constant_values=False)
     z1 = ((0, 0),)
+    if topo.wrap_x:
+        w_sp = jnp.concatenate([space[:, :, -1:, E], space[:, :, :-1, E]], axis=2)
+        e_sp = jnp.concatenate([space[:, :, 1:, W], space[:, :, :1, W]], axis=2)
+    else:
+        w_sp = pad(space[:, :, :-1, E], z1 + ((0, 0), (1, 0)))  # W out -> west nbr's E
+        e_sp = pad(space[:, :, 1:, W], z1 + ((0, 0), (0, 1)))   # E out -> east nbr's W
+    if topo.wrap_y:
+        n_sp = jnp.concatenate([space[:, -1:, :, S], space[:, :-1, :, S]], axis=1)
+        s_sp = jnp.concatenate([space[:, 1:, :, N], space[:, :1, :, N]], axis=1)
+    else:
+        n_sp = pad(space[:, :-1, :, S], z1 + ((1, 0), (0, 0)))  # N out -> north nbr's S
+        s_sp = pad(space[:, 1:, :, N], z1 + ((0, 1), (0, 0)))   # S out -> south nbr's N
+
+    # Multi-chip boundary links accept one flit every boundary_period
+    # cycles (the narrower off-chip channel): gate the E output of the
+    # column west of each boundary and the W output east of it.
+    if topo.gated:
+        open_now = (cycle % topo.boundary_period) == 0
+        cols = topo.boundary_cols(cfg.nx)
+        if kernel_safe:
+            iox = lax.broadcasted_iota(I32, (1, 1, cfg.nx), 2)
+            e_gate = w_gate = jnp.zeros((1, 1, cfg.nx), bool)
+            for c0 in cols:
+                e_gate = e_gate | (iox == c0 - 1)
+                w_gate = w_gate | (iox == c0)
+        else:
+            e_gate = np.zeros((1, 1, cfg.nx), bool)
+            w_gate = np.zeros((1, 1, cfg.nx), bool)
+            e_gate[0, 0, [c0 - 1 for c0 in cols]] = True
+            w_gate[0, 0, [c0 for c0 in cols]] = True
+        e_sp = e_sp & (open_now | ~e_gate)
+        w_sp = w_sp & (open_now | ~w_gate)
+
     out_space = jnp.stack([
         jnp.ones(space.shape[:-1], bool),               # P (gated later)
-        pad(space[:, :, :-1, E], z1 + ((0, 0), (1, 0))),  # W out -> west nbr's E
-        pad(space[:, :, 1:, W], z1 + ((0, 0), (0, 1))),   # E out -> east nbr's W
-        pad(space[:, :-1, :, S], z1 + ((1, 0), (0, 0))),  # N out -> north nbr's S
-        pad(space[:, 1:, :, N], z1 + ((0, 1), (0, 0))),   # S out -> south nbr's N
+        w_sp, e_sp, n_sp, s_sp,
     ], axis=-1)
 
     # Round-robin arbitration, all five output ports of both networks at
@@ -381,6 +433,35 @@ def _arbitrate_fused(net: Fifo, rr: jax.Array, xs, ys,
     cand = (valid[..., :, None]                 # (2, ny, nx, in, out)
             & (want[..., :, None] == io_out)
             & out_space[..., None, :])
+
+    # Ring bubble flow control (see repro.mesh.topology): a packet
+    # ENTERING a wrapped-dimension ring needs TWO free slots in the target
+    # FIFO; the CONTINUING input (the opposite port of the same dimension,
+    # in = ((out - 1) ^ 1) + 1) needs the usual one.  Compiled out on
+    # non-wrapped topologies.
+    if topo.wrap_x or topo.wrap_y:
+        space2 = net.count < depth - 1          # >= 2 free slots
+        ones2 = jnp.ones(space2.shape[:-1], bool)
+        if topo.wrap_x:
+            w2 = jnp.concatenate([space2[:, :, -1:, E], space2[:, :, :-1, E]], axis=2)
+            e2 = jnp.concatenate([space2[:, :, 1:, W], space2[:, :, :1, W]], axis=2)
+        else:
+            w2 = e2 = ones2
+        if topo.wrap_y:
+            n2 = jnp.concatenate([space2[:, -1:, :, S], space2[:, :-1, :, S]], axis=1)
+            s2 = jnp.concatenate([space2[:, 1:, :, N], space2[:, :1, :, N]], axis=1)
+        else:
+            n2 = s2 = ones2
+        out_space2 = jnp.stack([ones2, w2, e2, n2, s2], axis=-1)
+        bubble_out = None                       # which outputs enter rings
+        if topo.wrap_x:
+            bubble_out = (io_out == E) | (io_out == W)
+        if topo.wrap_y:
+            b_y = (io_out == N) | (io_out == S)
+            bubble_out = b_y if bubble_out is None else (bubble_out | b_y)
+        is_cont = io_in == (((io_out - 1) ^ 1) + 1)     # (in, out) broadcast
+        need2 = bubble_out & ~is_cont
+        cand = cand & (out_space2[..., None, :] | ~need2)
     prio = (io_in - rr[..., None, :]) % NUM_DIRS
     prio = jnp.where(cand, prio, NUM_DIRS + 1)
     best = prio.min(-2)                         # (2, ny, nx, out)
@@ -422,31 +503,40 @@ def _finalize(win: jax.Array, rr: jax.Array, deliver_space: jax.Array,
 
 def _neighbor_push_masks(has: jax.Array, moved_pkt: jax.Array,
                          p_mask: jax.Array, p_pkt: jax.Array,
+                         topo: Topology,
                          ) -> Tuple[jax.Array, jax.Array]:
     """Turn per-output winners into per-input push masks for the neighbour
     FIFOs, with the local port-P enqueue (endpoint response or program
     injection) folded into the same single write.  Every destination
-    (tile, in_port) has exactly one feeder, so this is conflict-free."""
+    (tile, in_port) has exactly one feeder, so this is conflict-free.
+    Wrapped dimensions feed the opposite edge (static slice+concat)."""
     padm = functools.partial(jnp.pad, mode="constant", constant_values=False)
     padp = jnp.pad
     # in-port k of tile t receives the opposite-direction output of the
     # adjacent tile: W <- west nbr's E, E <- east nbr's W, N <- north nbr's
     # S, S <- south nbr's N; port P is the local enqueue.
-    mask_in = jnp.stack([
-        p_mask,
-        padm(has[:, :-1, E], ((0, 0), (1, 0))),
-        padm(has[:, 1:, W], ((0, 0), (0, 1))),
-        padm(has[:-1, :, S], ((1, 0), (0, 0))),
-        padm(has[1:, :, N], ((0, 1), (0, 0))),
-    ], axis=-1)
-    z2 = ((0, 0), (0, 0))
-    pkt_in = jnp.stack([
-        p_pkt,
-        padp(moved_pkt[:, :, :-1, E], z2 + ((1, 0),)),
-        padp(moved_pkt[:, :, 1:, W], z2 + ((0, 1),)),
-        padp(moved_pkt[:, :-1, :, S], ((0, 0), (1, 0), (0, 0))),
-        padp(moved_pkt[:, 1:, :, N], ((0, 0), (0, 1), (0, 0))),
-    ], axis=-1)
+    if topo.wrap_x:
+        w_in = jnp.concatenate([has[:, -1:, E], has[:, :-1, E]], axis=1)
+        e_in = jnp.concatenate([has[:, 1:, W], has[:, :1, W]], axis=1)
+        w_pk = jnp.concatenate([moved_pkt[:, :, -1:, E], moved_pkt[:, :, :-1, E]], axis=2)
+        e_pk = jnp.concatenate([moved_pkt[:, :, 1:, W], moved_pkt[:, :, :1, W]], axis=2)
+    else:
+        w_in = padm(has[:, :-1, E], ((0, 0), (1, 0)))
+        e_in = padm(has[:, 1:, W], ((0, 0), (0, 1)))
+        w_pk = padp(moved_pkt[:, :, :-1, E], ((0, 0), (0, 0), (1, 0)))
+        e_pk = padp(moved_pkt[:, :, 1:, W], ((0, 0), (0, 0), (0, 1)))
+    if topo.wrap_y:
+        n_in = jnp.concatenate([has[-1:, :, S], has[:-1, :, S]], axis=0)
+        s_in = jnp.concatenate([has[1:, :, N], has[:1, :, N]], axis=0)
+        n_pk = jnp.concatenate([moved_pkt[:, -1:, :, S], moved_pkt[:, :-1, :, S]], axis=1)
+        s_pk = jnp.concatenate([moved_pkt[:, 1:, :, N], moved_pkt[:, :1, :, N]], axis=1)
+    else:
+        n_in = padm(has[:-1, :, S], ((1, 0), (0, 0)))
+        s_in = padm(has[1:, :, N], ((0, 1), (0, 0)))
+        n_pk = padp(moved_pkt[:, :-1, :, S], ((0, 0), (1, 0), (0, 0)))
+        s_pk = padp(moved_pkt[:, 1:, :, N], ((0, 0), (0, 1), (0, 0)))
+    mask_in = jnp.stack([p_mask, w_in, e_in, n_in, s_in], axis=-1)
+    pkt_in = jnp.stack([p_pkt, w_pk, e_pk, n_pk, s_pk], axis=-1)
     return mask_in, pkt_in
 
 
@@ -508,8 +598,8 @@ def _step_core(cfg: SimConfig, prog: Program, st: SimState, *,
         lat_hist = st.lat_hist.at[bin_idx].add(in_win.astype(I32))
 
     # ---- both networks: ONE fused routing + arbitration pass ----
-    win2, moved2 = _arbitrate_fused(st.net, st.rr, xs, ys, st.fifo_depth,
-                                    kernel_safe)
+    win2, moved2 = _arbitrate_fused(cfg, st.net, st.rr, xs, ys,
+                                    st.fifo_depth, c, kernel_safe)
 
     # ---- reverse network: P deliveries are ALWAYS absorbed ----
     rr_rev, rpop, rhas = _finalize(win2[REV], st.rr[REV],
@@ -544,7 +634,8 @@ def _step_core(cfg: SimConfig, prog: Program, st: SimState, *,
             slot_oh = None
             inj = jnp.take(st.resp_valid, slot, axis=0)
             inj_pkt = jnp.take(st.resp_buf, slot, axis=1)
-    rmask_in, rpkt_in = _neighbor_push_masks(rhas, rmoved, inj, inj_pkt)
+    rmask_in, rpkt_in = _neighbor_push_masks(rhas, rmoved, inj, inj_pkt,
+                                             cfg.topology)
     rev_tail = (rev_head + rev_count) % st.fifo_depth
     rev_count = rev_count + rmask_in.astype(I32)
     if L == 1:
@@ -636,7 +727,8 @@ def _step_core(cfg: SimConfig, prog: Program, st: SimState, *,
         entry[_PI["addr"]], entry[_PI["data"]], entry[_PI["cmp"]],
         jnp.full((ny, nx), c, I32),
     ])                                                      # (F, ny, nx)
-    fmask_in, fpkt_in = _neighbor_push_masks(fhas, fmoved, can_inj, pkt)
+    fmask_in, fpkt_in = _neighbor_push_masks(fhas, fmoved, can_inj, pkt,
+                                             cfg.topology)
     fwd_tail = (fwd_head + fwd_count) % st.fifo_depth
     fwd_count = fwd_count + fmask_in.astype(I32)
     credits = credits - can_inj.astype(I32)

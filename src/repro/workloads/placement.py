@@ -95,8 +95,14 @@ class Placement:
         x, y = self.coords[rank % self.k]
         return int(x), int(y)
 
-    def ring_hop_length(self, rank: int) -> int:
-        """Manhattan distance of the ring link rank -> rank+1 (mod k)."""
+    def ring_hop_length(self, rank: int, topology=None) -> int:
+        """Routed distance of the ring link rank -> rank+1 (mod k):
+        Manhattan on the mesh, ring distance on wrapped dimensions when a
+        :class:`repro.mesh.topology.Topology` is given (on a torus the
+        snake ring's long wrap-around link collapses to the wraparound
+        hop)."""
         x0, y0 = self.tile(rank)
         x1, y1 = self.tile((rank + 1) % self.k)
-        return abs(x1 - x0) + abs(y1 - y0)
+        if topology is None:
+            return abs(x1 - x0) + abs(y1 - y0)
+        return int(topology.hops(x0, y0, x1, y1, self.nx, self.ny))

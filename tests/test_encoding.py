@@ -243,6 +243,78 @@ def test_simconfig_rejects_oversize_mesh():
 
 
 # ----------------------------------------------------------------------
+# multi-chip coordinates: the chip id rides inside the x coordinate
+# ----------------------------------------------------------------------
+def test_chip_coordinate_roundtrip_extremes():
+    """chip_split/chip_join are exact inverses for every representable
+    coordinate — including the largest mesh (COORD_LIMIT wide) and the
+    columns straddling every chip boundary — and the header round-trips
+    the chip id bits because it round-trips the global coordinate."""
+    from repro.mesh import Topology
+    from repro.mesh.encoding import chip_join, chip_split
+    for chips in (2, 4):
+        topo = Topology.multi_chip(chips_x=chips)
+        for nx in (chips, 2 * chips, COORD_LIMIT):
+            w = topo.chip_width(nx)
+            edges = {0, 1, w - 1, w, nx - w, nx - 1}
+            xs = np.asarray(sorted(x for x in edges if 0 <= x < nx))
+            chip, local = chip_split(xs, topo, nx)
+            assert (0 <= chip).all() and (chip < chips).all()
+            assert (0 <= local).all() and (local < w).all()
+            np.testing.assert_array_equal(chip_join(chip, local, topo, nx),
+                                          xs)
+            # through the packed header: global x survives, so the chip
+            # id (its high part) survives
+            hdr = pack_header(xs, 0, xs, 0, 1)
+            got = decode_header(hdr)
+            np.testing.assert_array_equal(
+                chip_split(got["dst_x"], topo, nx)[0], chip)
+            np.testing.assert_array_equal(
+                chip_split(got["src_x"], topo, nx)[0], chip)
+
+
+def test_validate_program_checks_topology_layout():
+    """validate_program(topology=...) rejects arrays the topology cannot
+    be laid onto, and the facade attach path applies it for both
+    backends."""
+    from repro.mesh import Topology
+    prog = make_traffic("uniform", 4, 4, 2, seed=0)
+    validate_program(prog, nx=4, ny=4,
+                     topology=Topology.multi_chip(chips_x=2))  # no raise
+    with pytest.raises(ValueError, match="divisible"):
+        validate_program(prog, nx=5, ny=4,
+                         topology=Topology.multi_chip(chips_x=2))
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_multichip_extreme_coords_deliver(backend):
+    """Cross-boundary packets addressed at the extreme columns (0 and
+    nx-1, opposite chips) deliver correctly — coordinates are global, no
+    chip-local translation leaks into the datapath."""
+    from repro.mesh import Topology
+    nx, ny = 8, 2
+    cfg = MeshConfig(nx=nx, ny=ny,
+                     topology=Topology.multi_chip(chips_x=2,
+                                                  boundary_period=3))
+    prog = empty_program(nx, ny, 1)
+    prog["op"][0, 0, 0] = OP_STORE       # chip 0 edge -> chip 1 far edge
+    prog["dst_x"][0, 0, 0] = nx - 1
+    prog["dst_y"][0, 0, 0] = 1
+    prog["addr"][0, 0, 0] = 7
+    prog["data"][0, 0, 0] = 42
+    prog["op"][1, nx - 1, 0] = OP_STORE  # chip 1 edge -> chip 0 far edge
+    prog["dst_x"][1, nx - 1, 0] = 0
+    prog["dst_y"][1, nx - 1, 0] = 0
+    prog["addr"][1, nx - 1, 0] = 3
+    prog["data"][1, nx - 1, 0] = -42
+    sim = Simulator(cfg, backend=backend)
+    sim.attach(prog)
+    sim.run_until_drained(max_cycles=500)
+    assert int(sim.mem[1, nx - 1, 7]) == 42
+    assert int(sim.mem[0, 0, 3]) == -42
+
+
+# ----------------------------------------------------------------------
 # unroll / check_every: speed knobs, never results
 # ----------------------------------------------------------------------
 def test_unroll_is_bit_identical():

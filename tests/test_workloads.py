@@ -36,6 +36,42 @@ def test_placement_ring_hops():
     assert p.ring_hop_length(p.k - 1) == 3
 
 
+def test_placement_ring_hops_topology_aware():
+    """On the torus the snake ring's long wrap-around link collapses to
+    the single wraparound hop; every other link is unchanged."""
+    from repro.mesh import Topology
+    p = Placement.ring(4, 4)
+    torus = Topology.torus()
+    assert all(p.ring_hop_length(r, topology=torus) == 1
+               for r in range(p.k - 1))
+    assert p.ring_hop_length(p.k - 1) == 3
+    assert p.ring_hop_length(p.k - 1, topology=torus) == 1
+
+
+def test_ring_all_reduce_torus_beats_mesh_by_wrap_factor():
+    """The same ring all-reduce on the same placement, mesh vs torus,
+    both backends parity-checked (backend="both").  With one outstanding
+    credit the per-step time is set by the slowest ring link's round
+    trip, so cycles/step must improve by about the RTT ratio of the
+    wrap-around link: unloaded_rtt(3) / unloaded_rtt(1) on a 4x4."""
+    from repro.core.netsim import unloaded_rtt
+    from repro.mesh import Topology
+    w = ring_all_reduce(4, 4, 16, mem_words=16)
+    cycles = {}
+    for kind, topo in (("mesh", Topology.mesh()), ("torus", Topology.torus())):
+        cfg = MeshConfig(nx=4, ny=4, max_out_credits=1, router_fifo=2,
+                         mem_words=16, topology=topo)
+        cycles[kind] = run_workload(w, cfg, backend="both").cycles
+    assert cycles["torus"] < cycles["mesh"]
+    pl = w.placement
+    wrap = pl.k - 1
+    expected = unloaded_rtt(pl.ring_hop_length(wrap)) \
+        / unloaded_rtt(pl.ring_hop_length(wrap, topology=Topology.torus()))
+    ratio = cycles["mesh"] / cycles["torus"]
+    assert ratio >= 0.9 * expected, \
+        f"torus speedup {ratio:.2f} below the wraparound factor {expected:.2f}"
+
+
 def test_placement_validation():
     with pytest.raises(ValueError):
         Placement(2, 2, ((0, 0), (5, 0)))          # off-mesh
