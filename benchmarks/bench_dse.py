@@ -1,0 +1,125 @@
+"""Fleet-scale design-space-exploration benchmark + acceptance gates.
+
+Runs the canonical 16x16 buffer-sizing sweep through the DSE service —
+fifo depth x credit allowance x traffic pattern x offered load x
+topology, 576 points — and extracts the mesh-vs-torus Pareto frontiers
+of buffer area vs. saturation throughput.  The full cross product rides
+TWO compiled programs (one per topology bucket: every depth/credits/
+pattern/load combination batches under the bucket's capacity config),
+which is the service's whole reason to exist.
+
+Checks (the acceptance bar for ``experiments/dse_frontier.json``):
+
+* the sweep spans >= 500 points and completes through the bucketed/
+  batched path with one compile per bucket;
+* an immediate re-submission is served ENTIRELY from the on-disk result
+  cache — zero points simulated, zero recompiles;
+* the swept baseline configuration (router_fifo=16, credits=128 — the
+  ``sweep_config`` every earlier benchmark measured) reproduces the
+  cross-topology benchmark's saturation knees: 0.25 on the mesh, 0.40
+  on the torus, from byte-identical programs and configs;
+* every topology's frontier is non-empty and monotone (area buys
+  throughput, dominated configurations dropped).
+
+The result cache lives in ``experiments/dse_cache/<code-hash>/``; a
+second local run (or a re-costed frontier) simulates nothing.
+"""
+from __future__ import annotations
+
+import time
+from pathlib import Path
+from typing import Dict, List
+
+from repro.dse import (SweepSpec, frontier_artifact, frontier_ascii,
+                       run_sweep)
+from repro.netsim_jax import DEFAULT_SWEEP_RATES
+
+__all__ = ["dse_spec", "bench_dse_frontier", "run"]
+
+# PR-8 cross-topology knees at the sweep_config baseline point
+# (router_fifo=16, max_out_credits=128, uniform, seed 0, 300/500/500)
+EXPECTED_KNEES = {"mesh": 0.25, "torus": 0.40}
+BASELINE = {"fifo_depth": 16, "credits": 128}
+
+CACHE_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dse_cache"
+
+
+def dse_spec() -> SweepSpec:
+    """The canonical 16x16 fleet sweep: 2 topologies x 4 depths x
+    3 credits x (2 patterns x 12 loads) = 576 points, phased exactly
+    like the cross-topology benchmark so the baseline point is
+    bit-identical to its curves."""
+    return SweepSpec(
+        nx=16, ny=16,
+        fifo_depths=(2, 4, 8, 16),
+        credits=(8, 32, 128),
+        patterns=("uniform", "tornado"),
+        loads=DEFAULT_SWEEP_RATES,
+        topologies=("mesh", "torus"),
+        warmup=300, measure=500, drain=500, seed=0,
+        name="16x16_fleet")
+
+
+def _baseline_knee(artifact: Dict, topology: str):
+    for p in artifact["frontiers"][topology]["points"]:
+        if (p["fifo_depth"] == BASELINE["fifo_depth"]
+                and p["credits"] == BASELINE["credits"]):
+            return p["saturation_rate"]
+    return None
+
+
+def bench_dse_frontier(cache_dir=CACHE_DIR) -> Dict:
+    spec = dse_spec()
+    t0 = time.perf_counter()
+    first = run_sweep(spec, cache_dir=cache_dir, progress=print)
+    # resubmission must be pure cache replay: nothing simulated, nothing
+    # (re)compiled — the resumability half of the acceptance bar
+    resumed = run_sweep(spec, cache_dir=cache_dir)
+    wall = time.perf_counter() - t0
+
+    artifact = frontier_artifact(first)
+    checks = {
+        "spans_500_points": first.n_points >= 500,
+        "bucketed": 0 < first.buckets <= len(spec.topologies) * 2
+        and first.compiles <= first.buckets,
+        "resume_simulates_nothing": resumed.simulated == 0
+        and resumed.compiles == 0 and resumed.records == first.records,
+    }
+    for topo, want in EXPECTED_KNEES.items():
+        knee = _baseline_knee(artifact, topo)
+        checks[f"{topo}_baseline_knee"] = (
+            knee is not None and abs(knee - want) < 1e-9)
+        f = artifact["frontiers"][topo]
+        checks[f"{topo}_frontier_monotone"] = bool(
+            f["frontier"]) and f["monotone"]
+        print(f"  {topo}: baseline knee {knee} (want {want}), "
+              f"frontier {len(f['frontier'])}/{len(f['points'])} configs, "
+              f"monotone {f['monotone']}", flush=True)
+    print(frontier_ascii(artifact), flush=True)
+
+    return {
+        "name": "dse_frontier_16x16",
+        "ok": all(checks.values()),
+        "wall_s": round(wall, 2),
+        "n_points": first.n_points,
+        "simulated": first.simulated,
+        "cache_hits": first.cache_hits,
+        "buckets": first.buckets,
+        "compiles": first.compiles,
+        "infeasible": first.infeasible,
+        "resume": {"simulated": resumed.simulated,
+                   "compiles": resumed.compiles,
+                   "cache_hits": resumed.cache_hits,
+                   "wall_s": resumed.wall_s},
+        "checks": checks,
+        "artifact": artifact,
+    }
+
+
+def run() -> List[Dict]:
+    return [bench_dse_frontier()]
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=1, default=str))

@@ -22,7 +22,11 @@ A fraction of the full benchmark battery, sized for a CI job:
   the workload traffic compiler, each run on BOTH backends with the
   bit-identical telemetry assert — catches regressions in the
   compile -> attach -> drain -> report loop the cost model's netsim mode
-  depends on.
+  depends on;
+* a 4x4 design-space-exploration smoke: a tiny mesh-vs-torus sweep run
+  twice through ``repro.dse`` — the second submission must be a pure
+  result-cache replay and the extracted Pareto frontiers non-empty and
+  monotone.
 
   PYTHONPATH=src python -m benchmarks.perf_smoke
 
@@ -176,11 +180,49 @@ def workloads_smoke() -> List[Dict]:
     return out
 
 
+def dse_smoke() -> List[Dict]:
+    """Tiny 4x4 design-space sweep through the full DSE service path —
+    bucketed/batched execution, on-disk result-cache resume (second
+    submission must simulate and compile nothing), and a monotone
+    non-empty mesh-vs-torus frontier.  Minutes-scale CI stand-in for the
+    576-point ``benchmarks.bench_dse`` acceptance sweep."""
+    import tempfile
+
+    from repro.dse import SweepSpec, frontier_artifact, run_sweep
+    spec = SweepSpec(nx=4, ny=4, fifo_depths=(2, 4), credits=(4, 16),
+                     patterns=("uniform",), loads=(0.05, 0.2, 0.4),
+                     topologies=("mesh", "torus"), warmup=50, measure=100,
+                     drain=100, name="ci_smoke")
+    t0 = time.perf_counter()
+    ok, err = True, ""
+    n = resumed_sim = -1
+    try:
+        with tempfile.TemporaryDirectory() as td:
+            first = run_sweep(spec, cache_dir=td, chunk=8)
+            resumed = run_sweep(spec, cache_dir=td, chunk=8)
+        n, resumed_sim = first.n_points, resumed.simulated
+        art = frontier_artifact(first)
+        assert resumed.simulated == 0 and resumed.compiles == 0, \
+            "cache resume re-simulated"
+        assert resumed.records == first.records, "resume records diverged"
+        for topo, f in art["frontiers"].items():
+            assert f["frontier"] and f["monotone"], \
+                f"{topo} frontier empty or non-monotone"
+    except AssertionError as e:
+        head = str(e).strip().splitlines()
+        ok, err = False, head[0] if head else "?"
+    return [{"name": "dse_sweep_smoke_4x4", "ok": ok, "points": n,
+             "resumed_simulated": resumed_sim,
+             "wall_s": round(time.perf_counter() - t0, 2),
+             **({"error": err} if err else {})}]
+
+
 def main() -> int:
     records = parity_grid()
     records.extend(pallas_parity_smoke())
     records.extend(torus_parity_smoke())
     records.extend(workloads_smoke())
+    records.extend(dse_smoke())
     micro = bench_step_throughput(shapes=((4, 4),), cycles=800,
                                   oracle_cycles=100)
     m = micro["meshes"]["4x4"]

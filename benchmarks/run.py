@@ -5,8 +5,10 @@
 
 Writes a JSON summary to experiments/bench_results.json; the netsim_jax
 load–latency saturation curves are additionally written to
-experiments/load_latency.json, and the cross-topology saturation records
-to experiments/topology_saturation.json (uploaded as CI artifacts).
+experiments/load_latency.json, the cross-topology saturation records
+to experiments/topology_saturation.json, and the design-space Pareto
+frontiers (buffer area vs. saturation throughput) to
+experiments/dse_frontier.json (uploaded as CI artifacts).
 
 Every run also APPENDS a trajectory entry to experiments/BENCH_netsim.json
 — per-benchmark wall seconds with compile time and run time recorded
@@ -28,7 +30,7 @@ from pathlib import Path
 from typing import Dict, List
 
 SUITES = ("netsim", "netsim_jax", "topology", "workloads", "collectives",
-          "kernels", "train")
+          "kernels", "train", "dse")
 
 # trajectory entries keep only the timing/health fields, not full payloads
 _TRAJECTORY_KEYS = ("wall_s", "compile_s", "run_s", "wall_s_incl_compile",
@@ -96,6 +98,28 @@ def gate_topology_saturation(results: Dict[str, List[Dict]],
     print(f"[OK ] topology gate: mesh saturation {float(got):.3f} >= "
           f"{floor} x baseline {float(want):.3f}", flush=True)
     return True
+
+
+def gate_dse_frontier(results: Dict[str, List[Dict]]) -> bool:
+    """Gate the design-space sweep's emitted Pareto frontier: the MESH
+    frontier must be non-empty and monotone (strictly more saturation
+    throughput for every extra mm² of buffer area) — an empty or
+    non-monotone frontier means the sweep, the cost model, or the
+    extractor regressed.  Vacuously True when the dse suite did not run
+    or crashed (the crash is already a failure on its own)."""
+    recs = [r for r in results.get("dse", [])
+            if r.get("name") == "dse_frontier_16x16" and "artifact" in r]
+    if not recs:
+        return True
+    mesh = recs[0]["artifact"]["frontiers"].get("mesh", {})
+    front = mesh.get("frontier") or []
+    if front and mesh.get("monotone"):
+        print(f"[OK ] dse gate: mesh frontier has {len(front)} "
+              f"configuration(s), monotone", flush=True)
+        return True
+    print(f"[FAIL] dse frontier gate: mesh frontier "
+          f"{'empty' if not front else 'not monotone'}", flush=True)
+    return False
 
 
 def trajectory_entry(results: Dict[str, List[Dict]], wall: float) -> Dict:
@@ -197,10 +221,18 @@ def main(argv=None) -> int:
         with open(out / "workload_reports.json", "w") as f:
             json.dump(wl, f, indent=1, default=str)
         print(f"wrote {out / 'workload_reports.json'}")
+    # standalone artifact: the design-space Pareto frontiers (buffer
+    # area vs. saturation throughput per topology) from the dse suite
+    dse = [r for r in results.get("dse", []) if "artifact" in r]
+    if dse:
+        with open(out / "dse_frontier.json", "w") as f:
+            json.dump(dse[0]["artifact"], f, indent=1, default=str)
+        print(f"wrote {out / 'dse_frontier.json'}")
     # PR-over-PR timing trajectory (appended, never overwritten)
     print(f"appended {append_trajectory(out, trajectory_entry(results, wall))}")
     gate_ok = gate_step_throughput(results)
     gate_ok &= gate_topology_saturation(results)
+    gate_ok &= gate_dse_frontier(results)
     if crashed:
         print(f"FAILED: suite(s) crashed: {', '.join(crashed)}")
         return 1

@@ -11,10 +11,11 @@ from __future__ import annotations
 import os
 
 import jax
+import numpy as np
 from jax import lax
 
 __all__ = ["shard_map", "axis_size", "pcast", "vma_of",
-           "make_auto_mesh", "make_auto_device_mesh",
+           "make_auto_mesh", "make_auto_device_mesh", "device_mesh_1d",
            "set_host_device_count"]
 
 
@@ -95,3 +96,17 @@ def make_auto_device_mesh(devices, axis_names):
         return jax.sharding.Mesh(devices, axis_names, axis_types=axis_types)
     except (AttributeError, TypeError):
         return jax.sharding.Mesh(devices, axis_names)
+
+
+def device_mesh_1d(n: int, axis_name: str = "devices"):
+    """A 1-D device mesh over the first ``n`` local devices — the
+    fan-out axis :func:`shard_map` batch runners (``repro.dse``) shard
+    over.  Raises ``ValueError`` when ``n`` exceeds the devices actually
+    present; callers that want graceful degradation check
+    ``jax.device_count()`` first."""
+    devices = jax.devices()
+    if not 1 <= n <= len(devices):
+        raise ValueError(
+            f"device_mesh_1d needs 1 <= n <= {len(devices)} available "
+            f"devices, got n={n}")
+    return make_auto_device_mesh(np.asarray(devices[:n]), (axis_name,))

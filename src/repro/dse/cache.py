@@ -1,0 +1,101 @@
+"""Resumable on-disk result cache for design-space sweeps.
+
+A fleet-scale sweep is re-submitted constantly — widened axes, re-costed
+frontiers, crashed runs resumed — and re-simulating half a million
+cycles per already-known point would dwarf the new work.  The cache
+stores one small JSON record per simulated point, keyed by
+
+* the **point key** (:meth:`repro.dse.SweepSpec.point_key` — the
+  point's effective mesh configuration plus the measurement recipe), and
+* the **code hash** (:func:`config_hash`) — a digest of the git-tracked
+  sources that determine simulated results (the simulator step, the
+  measurement program, routing/topology, traffic generation, packet
+  encoding).  Editing any of them moves the cache to a fresh directory,
+  so stale results can never leak into a frontier; untouched code keeps
+  the old directory hot.
+
+Records hold raw telemetry only.  Costs (area/energy) are applied at
+frontier-extraction time, so re-pricing a sweep under a different
+:class:`~repro.dse.cost.CostModel` is free.
+"""
+from __future__ import annotations
+
+import functools
+import hashlib
+import json
+from pathlib import Path
+from typing import Dict, Optional
+
+__all__ = ["config_hash", "ResultCache"]
+
+# the modules whose source determines simulated results; measured code
+# only (cost/pareto/spec are applied after simulation and deliberately
+# do NOT invalidate cached telemetry)
+_HASHED_MODULES = (
+    "repro.netsim_jax.sim",
+    "repro.netsim_jax.measure",
+    "repro.mesh.topology",
+    "repro.mesh.traffic",
+    "repro.mesh.encoding",
+    "repro.kernels.router_step",
+)
+
+
+@functools.lru_cache(maxsize=1)
+def config_hash() -> str:
+    """Digest of the result-determining, git-tracked simulator sources."""
+    import importlib
+    h = hashlib.sha256()
+    for name in _HASHED_MODULES:
+        mod = importlib.import_module(name)
+        h.update(name.encode())
+        h.update(Path(mod.__file__).read_bytes())
+    return h.hexdigest()[:16]
+
+
+class ResultCache:
+    """One JSON file per point under ``root/<config_hash>/``.
+
+    ``root=None`` disables caching (every ``get`` misses, ``put`` is a
+    no-op) so callers can thread one code path either way.  Filenames
+    are a digest of the point key; the key itself is stored inside the
+    record and verified on read, so a (vanishingly unlikely) digest
+    collision degrades to a miss, never to a wrong result.
+    """
+
+    def __init__(self, root: Optional[Path]):
+        self.root = None if root is None else Path(root)
+        self.dir = None if self.root is None else self.root / config_hash()
+
+    @staticmethod
+    def _filename(key: str) -> str:
+        return hashlib.sha256(key.encode()).hexdigest()[:24] + ".json"
+
+    def path_for(self, key: str) -> Optional[Path]:
+        return None if self.dir is None else self.dir / self._filename(key)
+
+    def get(self, key: str) -> Optional[Dict]:
+        path = self.path_for(key)
+        if path is None:
+            return None
+        try:
+            record = json.loads(path.read_text())
+        except (OSError, json.JSONDecodeError):
+            return None
+        if record.pop("key", None) != key:
+            return None
+        return record
+
+    def put(self, key: str, record: Dict) -> None:
+        path = self.path_for(key)
+        if path is None:
+            return
+        path.parent.mkdir(parents=True, exist_ok=True)
+        tmp = path.with_suffix(".tmp")
+        tmp.write_text(json.dumps({**record, "key": key}, default=str))
+        tmp.replace(path)  # atomic: concurrent sweeps never read half a file
+
+    def __len__(self) -> int:
+        if self.dir is None or not self.dir.is_dir():
+            return 0
+        return sum(1 for _ in self.dir.glob("*.json"))

@@ -113,3 +113,14 @@ class MeshConfig:
 
     def replace(self, **kw) -> "MeshConfig":
         return dataclasses.replace(self, **kw)
+
+    # -- stable identity (DSE result cache, JSON artifacts) ------------
+    def cache_token(self) -> str:
+        """A stable, human-readable string identifying this
+        configuration — the mesh half of :mod:`repro.dse`'s on-disk
+        result-cache keys (``record_log`` is excluded: it changes what is
+        *logged*, never what is simulated)."""
+        return (f"{self.nx}x{self.ny}/{self.topology.spec}"
+                f"/fifo{self.router_fifo}/ep{self.ep_fifo}"
+                f"/cred{self.max_out_credits}/mem{self.mem_words}"
+                f"/lat{self.resp_latency}")

@@ -122,6 +122,56 @@ class Topology:
         return cls("multi_chip", chips_x=int(chips_x),
                    boundary_period=int(boundary_period))
 
+    # -- string form (sweep specs, cache keys, JSON artifacts) ----------
+    @classmethod
+    def parse(cls, spec) -> "Topology":
+        """A :class:`Topology` from its string form: one of the plain
+        kinds (``"mesh"``, ``"torus"``, ``"ring_mesh"``) or
+        ``"multi_chip[:chips_x[:boundary_period]]"``.  A ``Topology`` is
+        passed through, so declarative sweep specs can mix both forms."""
+        if isinstance(spec, cls):
+            return spec
+        if not isinstance(spec, str):
+            raise TypeError(
+                f"cannot interpret {spec!r} as a topology; pass a "
+                f"Topology or one of {KINDS} (multi_chip optionally as "
+                f"'multi_chip:chips_x:boundary_period')")
+        kind, _, rest = spec.partition(":")
+        if kind != "multi_chip":
+            if rest:
+                raise ValueError(
+                    f"topology {kind!r} takes no ':' parameters, "
+                    f"got {spec!r}")
+            if kind not in KINDS:
+                raise ValueError(
+                    f"unknown topology kind {kind!r}; known: {KINDS}")
+            return {"mesh": cls.mesh, "torus": cls.torus,
+                    "ring_mesh": cls.ring_mesh}[kind]()
+        try:
+            params = [int(p) for p in rest.split(":")] if rest else []
+        except ValueError:
+            raise ValueError(
+                f"multi_chip parameters must be ints, got {spec!r}") from None
+        if len(params) > 2:
+            raise ValueError(
+                f"multi_chip takes at most chips_x:boundary_period, "
+                f"got {spec!r}")
+        return cls.multi_chip(*params)
+
+    @property
+    def spec(self) -> str:
+        """The string :meth:`parse` round-trips (``"torus"``,
+        ``"multi_chip:2:4"``, ...)."""
+        if self.kind == "multi_chip":
+            return f"multi_chip:{self.chips_x}:{self.boundary_period}"
+        return self.kind
+
+    @property
+    def min_router_fifo(self) -> int:
+        """Smallest valid router FIFO depth: wrapped (ring) dimensions
+        need 2 slots for the bubble flow control, plain meshes 1."""
+        return 2 if (self.wrap_x or self.wrap_y) else 1
+
     # -- validation -----------------------------------------------------
     def validate_for(self, nx: int, ny: int) -> None:
         """Raise ``ValueError`` when this topology cannot be laid onto an

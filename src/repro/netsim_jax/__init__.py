@@ -15,7 +15,9 @@ code; this package remains the functional JAX layer it drives
 """
 from . import measure, sim, traffic  # noqa: F401
 from .measure import (DEFAULT_SWEEP_RATES, PhaseStats,  # noqa: F401
-                      ascii_curve, compile_sweep, curve_is_monotone,
+                      SweepKey, ascii_curve, batch_stats_fn,
+                      batched_phased_stats, clear_sweep_cache,
+                      compile_sweep, curve_is_monotone,
                       curve_record, hist_quantile, load_latency_sweep,
                       measure_program, phased_stats, saturation_point,
                       stack_rate_programs, sweep_config)
@@ -30,9 +32,10 @@ __all__ = ["JaxMeshSim", "Program", "SimConfig", "SimState", "drained",
            "empty_program_for", "init_state", "load_program", "simulate",
            "step", "run_until_drained", "run_until_drained_traced",
            "PATTERNS", "empty_program", "make_traffic",
-           "DEFAULT_SWEEP_RATES", "PhaseStats", "compile_sweep",
+           "DEFAULT_SWEEP_RATES", "PhaseStats", "SweepKey", "compile_sweep",
            "curve_is_monotone",
-           "ascii_curve",
+           "ascii_curve", "batch_stats_fn", "batched_phased_stats",
+           "clear_sweep_cache",
            "curve_record", "hist_quantile", "load_latency_sweep",
            "measure_program", "phased_stats", "saturation_point",
            "stack_rate_programs", "sweep_config"]

@@ -32,6 +32,7 @@ offered load whose mean latency reaches ``3x`` the zero-load latency
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Dict, NamedTuple, Optional, Sequence
 
@@ -41,7 +42,7 @@ import numpy as np
 
 from repro.core.netsim import LAT_BINS
 from repro.mesh.config import MeshConfig
-from .sim import (FWD, Program, SimConfig, SimState, init_state,
+from .sim import (FWD, I32, Program, SimConfig, SimState, init_state,
                   load_program, simulate)
 from .traffic import make_traffic
 
@@ -49,7 +50,8 @@ __all__ = ["PhaseStats", "phased_stats", "measure_program",
            "stack_rate_programs", "load_latency_sweep", "saturation_point",
            "curve_is_monotone", "curve_record", "hist_quantile",
            "compile_sweep", "SATURATION_FACTOR", "DEFAULT_SWEEP_RATES",
-           "sweep_config", "ascii_curve"]
+           "sweep_config", "ascii_curve", "SweepKey", "batch_stats_fn",
+           "batched_phased_stats", "clear_sweep_cache"]
 
 # mean latency >= SATURATION_FACTOR * zero-load latency <=> saturated
 SATURATION_FACTOR = 3.0
@@ -79,6 +81,42 @@ def _as_simconfig(cfg) -> SimConfig:
 F32 = jnp.float32
 
 
+@dataclasses.dataclass(frozen=True)
+class SweepKey:
+    """Static identity of one compiled sweep program.
+
+    Everything that determines the trace — the (hashable) simulator
+    config, the phase lengths and the execution knobs — in one frozen
+    dataclass.  It is the cache key for the jitted sweep programs below
+    AND the design-space-exploration bucket key (:mod:`repro.dse` groups
+    spec points that share a ``SweepKey`` + program shape so each bucket
+    compiles exactly once).  ``cfg`` accepts any config flavor and is
+    normalized to :class:`SimConfig`.
+    """
+    cfg: SimConfig
+    warmup: int
+    measure: int
+    drain: int
+    unroll: int = 1
+    impl: str = "fused"
+    cycles_per_call: int = 1
+
+    def __post_init__(self):
+        if not isinstance(self.cfg, SimConfig):
+            object.__setattr__(self, "cfg", _as_simconfig(self.cfg))
+        for name in ("warmup", "measure", "drain"):
+            v = getattr(self, name)
+            if not isinstance(v, int) or v < 0 or (name == "measure" and v == 0):
+                raise ValueError(
+                    f"SweepKey.{name} must be a nonnegative int (measure "
+                    f"positive), got {v!r}")
+
+    @property
+    def horizon(self) -> int:
+        """Total simulated cycles per point (warmup + measure + drain)."""
+        return self.warmup + self.measure + self.drain
+
+
 class PhaseStats(NamedTuple):
     """Measurement-window statistics (all jnp scalars except ``hist``).
 
@@ -93,6 +131,7 @@ class PhaseStats(NamedTuple):
     lat_p99: jax.Array
     lat_max: jax.Array
     peak_link_util: jax.Array  # busiest mesh channel (W/E/N/S), fwd network
+    hops: jax.Array            # total link crossings (both networks, W/E/N/S)
     hist: jax.Array            # (LAT_BINS,) latency histogram of the window
 
 
@@ -125,10 +164,10 @@ def phased_stats(cfg: SimConfig, prog: Program, state: SimState,
         measure_stop=state.cycle + warmup + measure)
     st, _ = simulate(cfg, prog, st, warmup, unroll, impl, cycles_per_call)
     inj0, comp0 = st.prog_ptr.sum(), st.completed.sum()
-    util0 = st.link_util[FWD]
+    util0 = st.link_util
     st, _ = simulate(cfg, prog, st, measure, unroll, impl, cycles_per_call)
     inj1, comp1 = st.prog_ptr.sum(), st.completed.sum()
-    util1 = st.link_util[FWD]
+    util1 = st.link_util
     st, _ = simulate(cfg, prog, st, drain, unroll, impl, cycles_per_call)
 
     hist = st.lat_hist
@@ -146,7 +185,12 @@ def phased_stats(cfg: SimConfig, prog: Program, state: SimState,
         lat_p99=hist_quantile(hist, 0.99),
         lat_max=jnp.max(jnp.where(hist > 0,
                                   jnp.arange(LAT_BINS), 0)).astype(F32),
-        peak_link_util=(util1 - util0)[..., 1:].max().astype(F32) / measure,
+        peak_link_util=(util1 - util0)[FWD, ..., 1:].max().astype(F32)
+        / measure,
+        # total W/E/N/S crossings on both networks during the window —
+        # the hop count the DSE energy model prices (port 0 is P, the
+        # tile's own processor port, which is not a mesh wire)
+        hops=(util1 - util0)[..., 1:].sum().astype(F32),
         hist=hist,
     )
 
@@ -244,6 +288,7 @@ def curve_record(out: Dict[str, object]) -> Dict[str, object]:
         "lat_p99": np.round(out["lat_p99"], 1).tolist(),
         "lat_max": np.round(out["lat_max"], 1).tolist(),
         "peak_link_util": np.round(out["peak_link_util"], 3).tolist(),
+        "hops": np.asarray(out["hops"]).astype(int).tolist(),
         "zero_load_latency": round(float(out["zero_load_latency"]), 2),
         "saturation_index": out["saturation_index"],
         "saturation_rate": out["saturation_rate"],
@@ -254,25 +299,82 @@ def curve_record(out: Dict[str, object]) -> Dict[str, object]:
 
 
 @functools.lru_cache(maxsize=None)
-def _sweep_jit(cfg: SimConfig, warmup: int, measure: int, drain: int,
-               unroll: int, impl: str = "fused", cycles_per_call: int = 1):
+def _sweep_jit(key: SweepKey):
     """The jitted, rate-vmapped phased-measurement program, cached per
-    (config, phase lengths, execution knobs) so every traffic pattern of
-    a sweep suite shares ONE compilation instead of re-tracing per call."""
+    :class:`SweepKey` so every traffic pattern of a sweep suite shares
+    ONE compilation instead of re-tracing per call."""
+    cfg = key.cfg
+
     def f(progs: Program) -> PhaseStats:
         return jax.vmap(
-            lambda p: phased_stats(cfg, p, init_state(cfg), warmup, measure,
-                                   drain, unroll, impl,
-                                   cycles_per_call))(progs)
+            lambda p: phased_stats(cfg, p, init_state(cfg), key.warmup,
+                                   key.measure, key.drain, key.unroll,
+                                   key.impl, key.cycles_per_call))(progs)
     return jax.jit(f)
 
 
+def batch_stats_fn(key: SweepKey):
+    """The *traceable* batched phased-measurement function for ``key``:
+    ``f(progs, fifo_depths, max_credits) -> PhaseStats``, every argument
+    and result carrying a leading batch axis.  ``fifo_depths`` /
+    ``max_credits`` are the per-point *dynamic* knobs (must not exceed
+    the static ``key.cfg`` capacities); each batch element runs from a
+    fresh state.  Returned untransformed so callers can compose it with
+    ``jit`` / ``lax.map`` chunking / ``shard_map`` fan-out — the DSE
+    runner (:mod:`repro.dse.runner`) does all three."""
+    cfg = key.cfg
+
+    def f(progs: Program, fifo_depths: jax.Array,
+          max_credits: jax.Array) -> PhaseStats:
+        return jax.vmap(
+            lambda p, d, c: phased_stats(
+                cfg, p, init_state(cfg, d, c), key.warmup, key.measure,
+                key.drain, key.unroll, key.impl, key.cycles_per_call))(
+            progs, fifo_depths, max_credits)
+    return f
+
+
+@functools.lru_cache(maxsize=None)
+def _batched_jit(key: SweepKey):
+    return jax.jit(batch_stats_fn(key))
+
+
+def batched_phased_stats(key, progs: Program, fifo_depths=None,
+                         max_credits=None) -> PhaseStats:
+    """Batched phased measurement: one vmapped, jitted call over a stack
+    of injection programs with per-point dynamic FIFO depths and credit
+    allowances.  ``key`` is a :class:`SweepKey` (or any config flavor,
+    wrapped with the default phase lengths); depths/credits default to
+    the config capacities.  Bit-identical to a Python loop of
+    :func:`phased_stats` calls (asserted in ``tests/test_dse.py``)."""
+    if not isinstance(key, SweepKey):
+        key = SweepKey(cfg=key, warmup=200, measure=400, drain=400)
+    n = int(progs.length.shape[0])
+    cfg = key.cfg
+    depths = jnp.broadcast_to(
+        jnp.asarray(cfg.router_fifo if fifo_depths is None else fifo_depths,
+                    I32), (n,))
+    credits = jnp.broadcast_to(
+        jnp.asarray(cfg.max_out_credits if max_credits is None
+                    else max_credits, I32), (n,))
+    return _batched_jit(key)(progs, depths, credits)
+
+
+def clear_sweep_cache() -> None:
+    """Drop every cached/jitted sweep program (:func:`_sweep_jit` and the
+    batched variant).  Long-running DSE services sweep many distinct
+    :class:`SweepKey`\\ s; without an occasional clear the jit cache —
+    and XLA's per-executable memory — grows without bound."""
+    _sweep_jit.cache_clear()
+    _batched_jit.cache_clear()
+
+
 class CompiledSweep(NamedTuple):
-    """An AOT-compiled sweep executable plus the phase-length key it was
+    """An AOT-compiled sweep executable plus the :class:`SweepKey` it was
     built for (the shapes alone cannot detect a warmup/measure/drain
     permutation with the same total horizon, so the key is checked)."""
     executable: object
-    key: tuple   # (cfg, warmup, measure, drain, unroll, impl, cycles_per_call)
+    key: SweepKey
 
     def __call__(self, progs: Program) -> "PhaseStats":
         return self.executable(progs)
@@ -288,14 +390,12 @@ def compile_sweep(cfg, progs: Program, *, warmup: int = 200,
     measure pure run time — the benchmark suite uses this to report
     compile and run time separately."""
     import time
-    cfg = _as_simconfig(cfg)
-    fn = _sweep_jit(cfg, warmup, measure, drain, unroll, impl,
-                    cycles_per_call)
+    key = SweepKey(_as_simconfig(cfg), warmup, measure, drain, unroll,
+                   impl, cycles_per_call)
+    fn = _sweep_jit(key)
     t0 = time.perf_counter()
     compiled = fn.lower(progs).compile()
-    return CompiledSweep(compiled, (cfg, warmup, measure, drain, unroll,
-                                    impl, cycles_per_call)), \
-        time.perf_counter() - t0
+    return CompiledSweep(compiled, key), time.perf_counter() - t0
 
 
 def load_latency_sweep(pattern: str, nx: int, ny: int,
@@ -317,18 +417,17 @@ def load_latency_sweep(pattern: str, nx: int, ny: int,
     # topology-aware patterns (tornado) must see the topology the sim
     # runs on; an explicit traffic_kw["topology"] still wins
     traffic_kw.setdefault("topology", cfg.topology)
-    horizon = warmup + measure + drain
-    progs = stack_rate_programs(pattern, nx, ny, rates, horizon, **traffic_kw)
+    want = SweepKey(cfg, warmup, measure, drain, unroll, impl,
+                    cycles_per_call)
+    progs = stack_rate_programs(pattern, nx, ny, rates, want.horizon,
+                                **traffic_kw)
     if compiled is None:
-        run = _sweep_jit(cfg, warmup, measure, drain, unroll, impl,
-                         cycles_per_call)
+        run = _sweep_jit(want)
     else:
         key = getattr(compiled, "key", None)
-        want = (cfg, warmup, measure, drain, unroll, impl, cycles_per_call)
         if key is not None and key != want:
             raise ValueError(
-                f"compiled sweep was built for (cfg, warmup, measure, "
-                f"drain, unroll, impl, cycles_per_call) = {key}, but "
+                f"compiled sweep was built for {key}, but "
                 f"load_latency_sweep was called with {want}; matching "
                 "shapes would execute silently with the wrong "
                 "measurement windows")
