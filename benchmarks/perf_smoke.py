@@ -26,7 +26,11 @@ A fraction of the full benchmark battery, sized for a CI job:
 * a 4x4 design-space-exploration smoke: a tiny mesh-vs-torus sweep run
   twice through ``repro.dse`` — the second submission must be a pure
   result-cache replay and the extracted Pareto frontiers non-empty and
-  monotone.
+  monotone;
+* a 4x4 simulation-service smoke: two same-shape requests submitted
+  concurrently must ride ONE vmapped batch, compile exactly ONE block
+  executable, and return stats bit-identical to direct
+  ``phased_stats`` runs — the batched-serving contract in seconds.
 
   PYTHONPATH=src python -m benchmarks.perf_smoke
 
@@ -217,12 +221,55 @@ def dse_smoke() -> List[Dict]:
              **({"error": err} if err else {})}]
 
 
+def sim_service_smoke() -> List[Dict]:
+    """4x4 simulation-service smoke: two concurrent same-shape requests
+    (different seeds) share ONE vmapped batch and ONE block compile, and
+    each response is bit-identical to its direct ``phased_stats`` run."""
+    from repro.netsim_jax.measure import phased_stats, _as_simconfig
+    from repro.netsim_jax.sim import init_state, load_program
+    from repro.sim_service import SimRequest, SimService, clear_service_cache
+
+    phases = dict(warmup=50, measure=100, drain=100, check_every=50)
+    reqs = [SimRequest(cfg=MeshConfig(nx=4, ny=4), pattern="uniform",
+                       load=0.3, seed=s, **phases) for s in (0, 1)]
+    t0 = time.perf_counter()
+    ok, err = True, ""
+    try:
+        clear_service_cache()
+        svc = SimService(max_batch=4)
+        resps = svc.run(reqs)
+        assert svc.metrics.batches == 1, \
+            f"expected 1 batch, got {svc.metrics.batches}"
+        assert svc.metrics.sim_compiles == 1, \
+            f"expected 1 block compile, got {svc.metrics.sim_compiles}"
+        for req, resp in zip(reqs, resps):
+            cfg = _as_simconfig(req.cfg)
+            length = int(np.ceil(req.load * req.horizon)) + 1
+            prog = load_program(make_traffic(
+                req.pattern, 4, 4, length, rate=req.load, seed=req.seed,
+                topology=req.cfg.topology))
+            direct = phased_stats(cfg, prog, init_state(cfg), req.warmup,
+                                  req.measure, req.drain)
+            for f in direct._fields:
+                a = np.asarray(getattr(direct, f))
+                b = np.asarray(getattr(resp.stats, f))
+                assert (a == b).all(), \
+                    f"seed={req.seed}: PhaseStats.{f} differs"
+    except AssertionError as e:
+        head = str(e).strip().splitlines()
+        ok, err = False, head[0] if head else "?"
+    return [{"name": "sim_service_smoke_4x4", "ok": ok,
+             "wall_s": round(time.perf_counter() - t0, 2),
+             **({"error": err} if err else {})}]
+
+
 def main() -> int:
     records = parity_grid()
     records.extend(pallas_parity_smoke())
     records.extend(torus_parity_smoke())
     records.extend(workloads_smoke())
     records.extend(dse_smoke())
+    records.extend(sim_service_smoke())
     micro = bench_step_throughput(shapes=((4, 4),), cycles=800,
                                   oracle_cycles=100)
     m = micro["meshes"]["4x4"]

@@ -8,7 +8,10 @@ removal.  Import it from here so the repo runs on both sides of the move:
 """
 from __future__ import annotations
 
+import collections
 import os
+from pathlib import Path
+from typing import Optional
 
 import jax
 import numpy as np
@@ -16,7 +19,9 @@ from jax import lax
 
 __all__ = ["shard_map", "axis_size", "pcast", "vma_of",
            "make_auto_mesh", "make_auto_device_mesh", "device_mesh_1d",
-           "set_host_device_count"]
+           "set_host_device_count", "enable_persistent_compilation_cache",
+           "disable_persistent_compilation_cache",
+           "compilation_cache_stats", "reset_compilation_cache_stats"]
 
 
 def set_host_device_count(n: int) -> None:
@@ -30,6 +35,108 @@ def set_host_device_count(n: int) -> None:
         flag = f"--xla_force_host_platform_device_count={n}"
         if flag not in flags:
             os.environ["XLA_FLAGS"] = f"{flags} {flag}".strip()
+
+# ----------------------------------------------------------------------
+# persistent (on-disk) XLA compilation cache
+# ----------------------------------------------------------------------
+# counters fed by jax.monitoring events; hits/misses are only recorded by
+# jax while a cache dir is configured
+_CACHE_EVENTS: collections.Counter = collections.Counter()
+_CACHE_LISTENER_REGISTERED = False
+_CACHE_DIR: Optional[Path] = None
+
+_HIT_EVENT = "/jax/compilation_cache/cache_hits"
+_MISS_EVENT = "/jax/compilation_cache/cache_misses"
+
+
+def _cache_event_listener(event: str, **_kw) -> None:
+    if "compilation_cache" in event:
+        _CACHE_EVENTS[event] += 1
+
+
+def _reset_jax_cache_state() -> None:
+    """Force jax to re-resolve the cache directory.  The compilation
+    cache initializes lazily at the first compile and then latches
+    (``_cache_initialized``); without a reset, arming the cache after
+    any jit call in the process is silently a no-op."""
+    try:
+        from jax._src import compilation_cache as _cc
+        _cc.reset_cache()
+    except Exception:  # private module moved: fresh-process arming still works
+        pass
+
+
+def enable_persistent_compilation_cache(cache_dir, *,
+                                        subkey: Optional[str] = None) -> Path:
+    """Point JAX's on-disk XLA compilation cache at ``cache_dir`` (created
+    if missing) so a later process re-compiling an identical program
+    deserializes the executable instead of re-running XLA — the cold-start
+    story for the simulation service and the bench suites.
+
+    ``subkey`` nests the cache one directory deeper (the sim service and
+    :mod:`repro.dse` pass :func:`repro.dse.cache.config_hash`, keying the
+    executables alongside the result cache: editing the simulator sources
+    moves both to a fresh directory together).  The entry-size /
+    compile-time floors are dropped so even the small CI programs cache.
+    Returns the directory actually used; idempotent.
+    """
+    global _CACHE_LISTENER_REGISTERED, _CACHE_DIR
+    path = Path(cache_dir)
+    if subkey:
+        path = path / subkey
+    path.mkdir(parents=True, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", str(path))
+    for knob, value in (("jax_persistent_cache_min_entry_size_bytes", -1),
+                        ("jax_persistent_cache_min_compile_time_secs", 0.0)):
+        try:
+            jax.config.update(knob, value)
+        except AttributeError:  # knob not present on this jax release
+            pass
+    if not _CACHE_LISTENER_REGISTERED:
+        try:
+            jax.monitoring.register_event_listener(_cache_event_listener)
+            # cache *hits* are reported as duration events, not plain ones
+            jax.monitoring.register_event_duration_secs_listener(
+                lambda event, _secs, **_kw: _cache_event_listener(event))
+            _CACHE_LISTENER_REGISTERED = True
+        except Exception:  # monitoring API moved/absent: stats degrade to 0
+            pass
+    _reset_jax_cache_state()
+    _CACHE_DIR = path
+    return path
+
+
+def disable_persistent_compilation_cache() -> None:
+    """Detach the on-disk compilation cache (fresh compiles pay full XLA
+    cost again).  Used by benchmarks that need an honest no-cache
+    baseline leg; re-enable with
+    :func:`enable_persistent_compilation_cache`."""
+    global _CACHE_DIR
+    jax.config.update("jax_compilation_cache_dir", None)
+    _reset_jax_cache_state()
+    _CACHE_DIR = None
+
+
+def compilation_cache_stats() -> dict:
+    """Hit/miss/entry accounting of the persistent compilation cache (all
+    zero until :func:`enable_persistent_compilation_cache` ran and a jit
+    compile exercised it)."""
+    entries = 0
+    if _CACHE_DIR is not None and _CACHE_DIR.is_dir():
+        entries = sum(1 for p in _CACHE_DIR.iterdir() if p.is_file())
+    return {
+        "enabled": _CACHE_DIR is not None,
+        "dir": None if _CACHE_DIR is None else str(_CACHE_DIR),
+        "hits": int(_CACHE_EVENTS[_HIT_EVENT]),
+        "misses": int(_CACHE_EVENTS[_MISS_EVENT]),
+        "entries": entries,
+    }
+
+
+def reset_compilation_cache_stats() -> None:
+    """Zero the hit/miss counters (the on-disk entries stay)."""
+    _CACHE_EVENTS.clear()
+
 
 try:  # jax >= 0.6: public API
     from jax import shard_map  # type: ignore[attr-defined]

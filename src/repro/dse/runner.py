@@ -209,14 +209,24 @@ def _point_from_record(record: Dict) -> SweepPoint:
 
 def run_sweep(spec: SweepSpec, *, cache_dir=None,
               devices: Optional[int] = None, chunk: int = 16,
+              compile_cache_dir=None,
               progress: Optional[Callable[[str], None]] = None
               ) -> SweepResult:
     """Run (the uncached remainder of) a sweep spec; see the module
     docstring for the pipeline.  ``cache_dir`` may be a directory path
     or a :class:`ResultCache` (None disables caching); ``devices``
     requests the shard_map fan-out width; ``chunk`` bounds how many
-    simulator states are live per device at once."""
+    simulator states are live per device at once.  ``compile_cache_dir``
+    additionally points JAX's persistent (on-disk) compilation cache at
+    that directory, keyed under :func:`~repro.dse.cache.config_hash` —
+    the same cache the simulation service (:mod:`repro.sim_service`)
+    shares, so re-running a sweep in a fresh process deserializes its
+    bucket executables instead of re-compiling them."""
     t0 = time.perf_counter()
+    if compile_cache_dir is not None:
+        from repro.compat import enable_persistent_compilation_cache
+        enable_persistent_compilation_cache(compile_cache_dir,
+                                            subkey=config_hash())
     log = progress if progress is not None else (lambda msg: None)
     cache = cache_dir if isinstance(cache_dir, ResultCache) \
         else ResultCache(cache_dir)

@@ -15,9 +15,10 @@ sequences free their slot (the credit returns on the reverse path).
 from __future__ import annotations
 
 import argparse
+import collections
 import dataclasses
 import time
-from typing import List, Optional
+from typing import Deque, List, Optional
 
 import numpy as np
 
@@ -71,7 +72,9 @@ class Server:
             self.cache = self.model.init_cache(cfg, slots, max_seq)
         self.active: List[Optional[_Slot]] = [None] * slots
         self.feed = np.zeros((slots,), np.int32)   # token each slot eats next
-        self.queue: List[Request] = []
+        # deque: admission pops from the head every tick, and a deep
+        # backlog with List.pop(0) is O(queue) per admit
+        self.queue: Deque[Request] = collections.deque()
         self.completed: List[Request] = []
         self.ticks = 0
 
@@ -84,7 +87,7 @@ class Server:
     def _admit(self):
         for s in range(self.slots):
             if self.active[s] is None and self.queue:
-                req = self.queue.pop(0)
+                req = self.queue.popleft()
                 slot = _Slot(req=req)
                 self.active[s] = slot
                 self.cache = self._reset_slot(self.cache, s)

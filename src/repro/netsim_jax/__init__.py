@@ -15,12 +15,14 @@ code; this package remains the functional JAX layer it drives
 """
 from . import measure, sim, traffic  # noqa: F401
 from .measure import (DEFAULT_SWEEP_RATES, PhaseStats,  # noqa: F401
-                      SweepKey, ascii_curve, batch_stats_fn,
+                      StreamChunk, SweepKey, ascii_curve, batch_stats_fn,
                       batched_phased_stats, clear_sweep_cache,
                       compile_sweep, curve_is_monotone,
                       curve_record, hist_quantile, load_latency_sweep,
-                      measure_program, phased_stats, saturation_point,
-                      stack_rate_programs, sweep_config)
+                      measure_program, phase_schedule, phased_stats,
+                      reduce_window_stats, saturation_point,
+                      stack_rate_programs, stream_phased_stats,
+                      sweep_config)
 from .sim import (FWD, REV, JaxMeshSim, Program, SimConfig,  # noqa: F401
                   SimState, drained, empty_program_for, init_state,
                   load_program, run_until_drained, run_until_drained_traced,
@@ -38,4 +40,6 @@ __all__ = ["JaxMeshSim", "Program", "SimConfig", "SimState", "drained",
            "clear_sweep_cache",
            "curve_record", "hist_quantile", "load_latency_sweep",
            "measure_program", "phased_stats", "saturation_point",
-           "stack_rate_programs", "sweep_config"]
+           "stack_rate_programs", "sweep_config",
+           "StreamChunk", "phase_schedule", "reduce_window_stats",
+           "stream_phased_stats"]

@@ -34,7 +34,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, NamedTuple, Optional, Sequence
+from typing import Dict, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -51,7 +51,9 @@ __all__ = ["PhaseStats", "phased_stats", "measure_program",
            "curve_is_monotone", "curve_record", "hist_quantile",
            "compile_sweep", "SATURATION_FACTOR", "DEFAULT_SWEEP_RATES",
            "sweep_config", "ascii_curve", "SweepKey", "batch_stats_fn",
-           "batched_phased_stats", "clear_sweep_cache"]
+           "batched_phased_stats", "clear_sweep_cache",
+           "StreamChunk", "phase_schedule", "reduce_window_stats",
+           "stream_phased_stats"]
 
 # mean latency >= SATURATION_FACTOR * zero-load latency <=> saturated
 SATURATION_FACTOR = 3.0
@@ -145,6 +147,42 @@ def hist_quantile(hist: jax.Array, q: float) -> jax.Array:
     return jnp.where(total > 0, jnp.minimum(idx, LAT_BINS - 1), 0).astype(F32)
 
 
+def reduce_window_stats(ntiles: int, measure: int, hist: jax.Array,
+                        d_inj: jax.Array, d_comp: jax.Array,
+                        d_util: jax.Array) -> PhaseStats:
+    """Reduce raw measurement-window telemetry into :class:`PhaseStats`:
+    ``hist`` is the (drain-complete) window latency histogram, ``d_inj`` /
+    ``d_comp`` the injected/completed count deltas across the window and
+    ``d_util`` the ``link_util`` delta (all int32, so they are exact no
+    matter how the phases were chunked).  Traceable — :func:`phased_stats`
+    applies it inline after its three phases, and the streaming paths
+    (:func:`stream_phased_stats`, :mod:`repro.sim_service`) apply the same
+    function under their own ``jit`` to snapshots accumulated block by
+    block, which is what keeps streamed results bit-identical to the
+    one-shot program."""
+    total = hist.sum()
+    bins = jnp.arange(LAT_BINS, dtype=F32)
+    denom = jnp.maximum(total, 1).astype(F32)
+    per_tile_cycle = float(measure * ntiles)
+    return PhaseStats(
+        offered=d_inj.astype(F32) / per_tile_cycle,
+        accepted=d_comp.astype(F32) / per_tile_cycle,
+        delivered=total.astype(F32) / per_tile_cycle,
+        lat_mean=(bins * hist).sum() / denom,
+        lat_p50=hist_quantile(hist, 0.50),
+        lat_p95=hist_quantile(hist, 0.95),
+        lat_p99=hist_quantile(hist, 0.99),
+        lat_max=jnp.max(jnp.where(hist > 0,
+                                  jnp.arange(LAT_BINS), 0)).astype(F32),
+        peak_link_util=d_util[FWD, ..., 1:].max().astype(F32) / measure,
+        # total W/E/N/S crossings on both networks during the window —
+        # the hop count the DSE energy model prices (port 0 is P, the
+        # tile's own processor port, which is not a mesh wire)
+        hops=d_util[..., 1:].sum().astype(F32),
+        hist=hist,
+    )
+
+
 @functools.partial(jax.jit, static_argnums=(0, 3, 4, 5, 6, 7, 8))
 def phased_stats(cfg: SimConfig, prog: Program, state: SimState,
                  warmup: int, measure: int, drain: int,
@@ -169,30 +207,110 @@ def phased_stats(cfg: SimConfig, prog: Program, state: SimState,
     inj1, comp1 = st.prog_ptr.sum(), st.completed.sum()
     util1 = st.link_util
     st, _ = simulate(cfg, prog, st, drain, unroll, impl, cycles_per_call)
+    return reduce_window_stats(ntiles, measure, st.lat_hist,
+                               inj1 - inj0, comp1 - comp0, util1 - util0)
 
-    hist = st.lat_hist
-    total = hist.sum()
-    bins = jnp.arange(LAT_BINS, dtype=F32)
-    denom = jnp.maximum(total, 1).astype(F32)
-    per_tile_cycle = float(measure * ntiles)
-    return PhaseStats(
-        offered=(inj1 - inj0).astype(F32) / per_tile_cycle,
-        accepted=(comp1 - comp0).astype(F32) / per_tile_cycle,
-        delivered=total.astype(F32) / per_tile_cycle,
-        lat_mean=(bins * hist).sum() / denom,
-        lat_p50=hist_quantile(hist, 0.50),
-        lat_p95=hist_quantile(hist, 0.95),
-        lat_p99=hist_quantile(hist, 0.99),
-        lat_max=jnp.max(jnp.where(hist > 0,
-                                  jnp.arange(LAT_BINS), 0)).astype(F32),
-        peak_link_util=(util1 - util0)[FWD, ..., 1:].max().astype(F32)
-        / measure,
-        # total W/E/N/S crossings on both networks during the window —
-        # the hop count the DSE energy model prices (port 0 is P, the
-        # tile's own processor port, which is not a mesh wire)
-        hops=(util1 - util0)[..., 1:].sum().astype(F32),
-        hist=hist,
-    )
+
+# -- per-fence-block streaming -------------------------------------------
+
+class StreamChunk(NamedTuple):
+    """Telemetry delta of one fence block of a streamed phased run —
+    everything is the *change* during cycles [start, stop), so
+    concatenating chunks (summing their fields) reproduces the run's
+    totals exactly (all counters are ints)."""
+    phase: str          # "warmup" | "measure" | "drain"
+    start: int          # first cycle of the block
+    stop: int           # one past the last cycle
+    injected: int       # program entries issued during the block (all tiles)
+    completed: int      # requests completed during the block
+    delivered: int      # window-tagged packets delivered during the block
+    hist: np.ndarray    # (LAT_BINS,) latency-histogram delta of the block
+
+
+def phase_schedule(warmup: int, measure: int, drain: int,
+                   check_every: int) -> Tuple[Tuple[str, int], ...]:
+    """The static fence-block schedule of a streamed phased run:
+    ``(phase, cycles)`` per block, each phase split into
+    ``check_every``-cycle blocks plus one remainder.  Phase boundaries
+    always land on block boundaries, so the warmup/measure snapshots of
+    the one-shot :func:`phased_stats` are reproducible from the stream."""
+    if check_every < 1:
+        raise ValueError(f"check_every must be >= 1, got {check_every}")
+    out = []
+    for phase, total in (("warmup", warmup), ("measure", measure),
+                         ("drain", drain)):
+        left = total
+        while left > 0:
+            c = min(check_every, left)
+            out.append((phase, c))
+            left -= c
+    return tuple(out)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _reduce_window_jit(ntiles: int, measure: int, hist, d_inj, d_comp,
+                       d_util) -> PhaseStats:
+    return reduce_window_stats(ntiles, measure, hist, d_inj, d_comp, d_util)
+
+
+def stream_phased_stats(cfg, prog: Program, *, warmup: int = 200,
+                        measure: int = 400, drain: int = 400,
+                        check_every: int = 100, fifo_depth=None,
+                        max_credits=None, unroll: int = 1,
+                        impl: str = "fused", cycles_per_call: int = 1):
+    """Streaming variant of :func:`phased_stats`: a generator yielding one
+    :class:`StreamChunk` per ``check_every``-cycle fence block as the
+    phases execute, and *returning* the final :class:`PhaseStats` (read it
+    from ``StopIteration.value``, or drive the generator with
+    ``yield from``).  The final stats are bit-identical to the one-shot
+    :func:`phased_stats` — the phases run through the same
+    :func:`repro.netsim_jax.simulate` in block-sized pieces (exact: the
+    state transition is pure) and the same :func:`reduce_window_stats`.
+    ``cfg`` may be any config flavor; the sim service streams the batched
+    equivalent of this loop."""
+    cfg = _as_simconfig(cfg)
+    # validates the phase recipe exactly like the one-shot entry points
+    SweepKey(cfg, warmup, measure, drain, unroll, impl, cycles_per_call)
+    st = init_state(cfg, fifo_depth, max_credits)
+    st = st._replace(measure_start=st.cycle + warmup,
+                     measure_stop=st.cycle + warmup + measure)
+
+    def snapshot(s: SimState) -> Tuple[int, int, np.ndarray]:
+        return (int(np.asarray(s.prog_ptr, np.int64).sum()),
+                int(np.asarray(s.completed, np.int64).sum()),
+                np.asarray(s.link_util, np.int64))
+
+    # phase-boundary snapshots: a zero-length warmup's boundary is the
+    # fresh state (exactly what phased_stats' 0-cycle warmup scan sees)
+    snap_w = snap_m = snapshot(st)
+    prev_inj = prev_comp = prev_deliv = 0
+    prev_hist = np.zeros_like(np.asarray(st.lat_hist))
+    cycle = 0
+    schedule = phase_schedule(warmup, measure, drain, check_every)
+    for i, (phase, cycles) in enumerate(schedule):
+        st, _ = simulate(cfg, prog, st, cycles, unroll, impl,
+                         cycles_per_call)
+        inj, comp, util = snapshot(st)
+        hist = np.asarray(st.lat_hist)
+        deliv = int(hist.sum())
+        yield StreamChunk(phase=phase, start=cycle, stop=cycle + cycles,
+                          injected=inj - prev_inj,
+                          completed=comp - prev_comp,
+                          delivered=deliv - prev_deliv,
+                          hist=hist - prev_hist)
+        prev_inj, prev_comp, prev_deliv = inj, comp, deliv
+        prev_hist = hist
+        cycle += cycles
+        last_of_phase = i + 1 == len(schedule) or schedule[i + 1][0] != phase
+        if last_of_phase and phase == "warmup":
+            snap_w = snap_m = (inj, comp, util)
+        elif last_of_phase and phase == "measure":
+            snap_m = (inj, comp, util)
+    return _reduce_window_jit(
+        cfg.nx * cfg.ny, measure, st.lat_hist,
+        jnp.asarray(snap_m[0] - snap_w[0], I32),
+        jnp.asarray(snap_m[1] - snap_w[1], I32),
+        jnp.asarray(snap_m[2] - snap_w[2], I32))
 
 
 def measure_program(cfg, entries: Dict[str, np.ndarray], *,

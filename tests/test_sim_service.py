@@ -1,0 +1,204 @@
+"""Simulation-service contract tests.
+
+The load-bearing claim is *bit-identity*: whatever the service does to
+amortize cost — pow2 program padding, lane-replication width padding,
+per-fence-block chunked execution, a separately jitted vmapped reduce —
+every :class:`PhaseStats` field of a service response equals the direct
+one-shot :func:`repro.netsim_jax.measure.phased_stats` run exactly.
+Plus the service mechanics: bucketing/compile accounting, streamed
+chunk-concatenation consistency, cold-vs-warm compile counts,
+bounded-queue backpressure, and the async surface.
+"""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.mesh.config import MeshConfig
+from repro.netsim_jax.measure import (load_latency_sweep, phased_stats,
+                                      _as_simconfig)
+from repro.netsim_jax.sim import init_state, load_program
+from repro.netsim_jax.traffic import make_traffic
+from repro.sim_service import (ServiceOverloaded, SimRequest, SimServer,
+                               SimService, SweepRequest,
+                               clear_service_cache)
+
+PHASES = dict(warmup=50, measure=100, drain=100, check_every=50)
+HORIZON = 250
+
+
+def _direct_stats(req: SimRequest):
+    """The ground truth: one-shot phased_stats on the request's exact
+    program and dynamic buffer knobs, no service in the loop."""
+    cfg = _as_simconfig(req.cfg)
+    if req.entries is not None:
+        prog = load_program(dict(req.entries))
+    else:
+        length = int(np.ceil(req.load * req.horizon)) + 1
+        prog = load_program(make_traffic(
+            req.pattern, req.cfg.nx, req.cfg.ny, length, rate=req.load,
+            seed=req.seed, topology=req.cfg.topology))
+    d, c = req.fifo_depth, req.max_credits
+    return phased_stats(cfg, prog, init_state(cfg, d, c), req.warmup,
+                        req.measure, req.drain, req.unroll, req.impl,
+                        req.cycles_per_call)
+
+
+def _assert_stats_equal(direct, served, ctx=""):
+    for f in direct._fields:
+        a, b = np.asarray(getattr(direct, f)), np.asarray(getattr(served, f))
+        assert a.shape == b.shape and (a == b).all(), \
+            f"{ctx}: PhaseStats.{f} differs: direct={a} served={b}"
+
+
+def test_batched_service_bit_identical_to_direct_runs():
+    """Heterogeneous same-shape batch (different seeds AND different
+    dynamic fifo/credit knobs in one vmapped call) == sequential direct
+    runs, every field, every lane."""
+    svc = SimService(max_batch=8)
+    cfg = MeshConfig(nx=4, ny=4, router_fifo=8, max_out_credits=32)
+    reqs = [SimRequest(cfg=cfg, pattern="uniform", load=0.3, seed=s,
+                       fifo_depth=d, max_credits=c, **PHASES)
+            for s, d, c in [(0, None, None), (1, 2, 8), (2, 8, 32),
+                            (3, 4, 16)]]
+    tickets = [svc.submit(r) for r in reqs]
+    svc.server.run_until_idle()
+    # same bucket -> ONE batch, every request in the same vmapped call
+    assert svc.metrics.batches == 1
+    for r, t in zip(reqs, tickets):
+        _assert_stats_equal(_direct_stats(r), t.response.stats,
+                            f"seed={r.seed} fifo={r.fifo_depth}")
+        assert t.response.metrics["batch_lanes"] == len(reqs)
+
+
+def test_mixed_shapes_bucket_and_compile_counts():
+    """Distinct compiled shapes (mesh size / padded program length /
+    cadence) land in distinct buckets; same-shape requests share one."""
+    clear_service_cache()
+    svc = SimService(max_batch=8)
+    reqs = (
+        # 2x same shape -> 1 bucket (pow2 program padding merges them)
+        [SimRequest(cfg=MeshConfig(nx=4, ny=4), load=0.3, seed=s, **PHASES)
+         for s in (0, 1)]
+        # different mesh -> new bucket
+        + [SimRequest(cfg=MeshConfig(nx=4, ny=2), load=0.3, **PHASES)]
+        # different cadence -> new bucket (different block schedule)
+        + [SimRequest(cfg=MeshConfig(nx=4, ny=4), load=0.3, warmup=50,
+                      measure=100, drain=100, check_every=125)])
+    tickets = [svc.submit(r) for r in reqs]
+    svc.server.run_until_idle()
+    assert svc.metrics.batches == 3
+    # bucket 1 (width 2): one 50-cycle block shape; bucket 2: same cycles
+    # but a new cfg; bucket 3 (width 1): blocks never cross a phase
+    # boundary, so ce=125 yields 50- and 100-cycle blocks — two fresh
+    # shapes (width 1 differs from bucket 1's width 2) -> 4 total
+    assert svc.metrics.sim_compiles == 4
+    for r, t in zip(reqs, tickets):
+        _assert_stats_equal(_direct_stats(r), t.response.stats)
+
+
+def test_streamed_chunks_concatenate_to_final_stats():
+    """Chunk deltas are exact: summed counters/histograms reproduce the
+    response totals, cover the full horizon, and phase labels follow the
+    warmup/measure/drain schedule."""
+    svc = SimService()
+    req = SimRequest(cfg=MeshConfig(nx=4, ny=4), load=0.3, **PHASES)
+    chunks = []
+    gen = svc.stream(req)
+    while True:
+        try:
+            chunks.append(next(gen))
+        except StopIteration as stop:
+            resp = stop.value
+            break
+    assert [c.chunk.phase for c in chunks] == \
+        ["warmup", "measure", "measure", "drain", "drain"]
+    assert chunks[0].chunk.start == 0 and chunks[-1].chunk.stop == HORIZON
+    assert all(a.chunk.stop == b.chunk.start
+               for a, b in zip(chunks, chunks[1:]))
+    hist = np.asarray(resp.stats.hist)
+    assert sum(c.chunk.delivered for c in chunks) == int(hist.sum())
+    assert (sum(c.chunk.hist for c in chunks) == hist).all()
+    # measure-window injected counts match the offered rate the reduce saw
+    inj_meas = sum(c.chunk.injected for c in chunks
+                   if c.chunk.phase == "measure")
+    assert inj_meas == round(float(resp.stats.offered) * 16 * 100)
+
+
+def test_cold_vs_warm_service_compile_counts():
+    """A second service instance in the same process re-serves a seen
+    shape with ZERO fresh executables (sim and aux), and identical
+    results."""
+    clear_service_cache()
+    req = SimRequest(cfg=MeshConfig(nx=4, ny=4), load=0.25, **PHASES)
+    cold = SimService(max_batch=4)
+    r_cold = cold.run_one(req)
+    assert cold.metrics.sim_compiles == 1
+    assert cold.metrics.aux_compiles == 2   # init + reduce
+    warm = SimService(max_batch=4)
+    r_warm = warm.run_one(req)
+    assert warm.metrics.sim_compiles == 0
+    assert warm.metrics.aux_compiles == 0
+    assert r_warm.metrics["new_sim_compiles"] == 0
+    _assert_stats_equal(r_cold.stats, r_warm.stats, "cold vs warm")
+
+
+def test_bounded_queue_backpressure():
+    """submit() past queue_limit raises ServiceOverloaded (and counts the
+    rejection); draining the queue re-opens admission."""
+    svc = SimService(queue_limit=3)
+    req = SimRequest(cfg=MeshConfig(nx=4, ny=4), load=0.3, **PHASES)
+    for _ in range(3):
+        svc.submit(req)
+    with pytest.raises(ServiceOverloaded):
+        svc.submit(req)
+    assert svc.metrics.rejected == 1
+    assert svc.metrics.peak_pending == 3
+    svc.server.run_until_idle()
+    ticket = svc.submit(req)           # space again once drained
+    svc.server.run_until_idle()
+    assert ticket.done
+
+
+def test_sweep_request_matches_load_latency_sweep():
+    """A service-side sweep == the library's load_latency_sweep, field by
+    field per rate, and the curve summary agrees on the knee."""
+    rates = (0.05, 0.2, 0.4, 0.6)
+    cfg = MeshConfig(nx=4, ny=4, router_fifo=16, max_out_credits=128)
+    svc = SimService(max_batch=4)
+    resp = svc.run_one(SweepRequest(cfg=cfg, rates=rates, **PHASES))
+    # the whole curve is one bucket -> one batch
+    assert svc.metrics.batches == 1
+    direct = load_latency_sweep("uniform", 4, 4, rates, cfg=cfg,
+                                warmup=50, measure=100, drain=100)
+    for i in range(len(rates)):
+        for f in resp.stats[0]._fields:
+            a = np.asarray(direct[f])[i]
+            b = np.asarray(getattr(resp.stats[i], f))
+            assert (a == b).all(), f"rate={rates[i]} field={f}"
+    assert resp.curve["saturation_index"] == direct["saturation_index"]
+    assert resp.curve["zero_load_latency"] == direct["zero_load_latency"]
+    assert resp.curve["monotone"] == direct["monotone"]
+
+
+def test_async_server_streams_and_resolves():
+    """The asyncio surface: serve() + Ticket.stream()/result() deliver
+    the same chunks and stats as the sync facade."""
+    req = SimRequest(cfg=MeshConfig(nx=4, ny=4), load=0.3, **PHASES)
+
+    async def scenario():
+        server = SimServer(max_batch=4)
+        t1, t2 = server.submit(req), server.submit(req)
+        serve = asyncio.ensure_future(server.serve(until_idle=True))
+
+        async def consume(t):
+            return [c async for c in t.stream()], await t.result()
+        (c1, r1), (c2, r2) = await asyncio.gather(consume(t1), consume(t2))
+        await serve
+        return server, c1, r1, c2, r2
+
+    server, c1, r1, c2, r2 = asyncio.run(scenario())
+    assert server.metrics.batches == 1      # both rode one vmapped batch
+    assert len(c1) == len(c2) == 5
+    _assert_stats_equal(r1.stats, r2.stats, "identical async twins")
+    _assert_stats_equal(_direct_stats(req), r1.stats, "async vs direct")
